@@ -1,0 +1,52 @@
+"""Shared benchmark scaffolding.
+
+CPU-budget note: the paper's full protocol (100 clients × 30 rounds × 30
+trials) is hours on this 1-core container; ``fast=True`` (the default for
+``python -m benchmarks.run``) scales the protocol down (16 clients, 5–8
+rounds, 1–3 trials) while keeping every structural element — the *orderings*
+the paper claims are what the numbers demonstrate.  ``--full`` restores the
+paper's sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List
+
+import numpy as np
+
+from repro.configs.paper_cnn import FLConfig
+
+FAST_FL = FLConfig(num_clients=16, clients_per_round=6, global_epochs=5,
+                   local_epochs=2, batch_size=16, lr=1e-3)
+FULL_FL = FLConfig()  # the paper's §VI constants
+
+FAST_SPC = 48    # samples per client (paper: 290)
+FAST_TRIALS = 1
+FULL_TRIALS = 30
+
+
+def fl_cfg(fast: bool) -> FLConfig:
+    return FAST_FL if fast else FULL_FL
+
+
+def spc(fast: bool) -> int:
+    return FAST_SPC if fast else 290
+
+
+def trials(fast: bool) -> int:
+    return FAST_TRIALS if fast else FULL_TRIALS
+
+
+def timeit_us(fn: Callable, n: int = 10, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """Contract output: ``name,us_per_call,derived`` CSV line."""
+    print(f"{name},{us_per_call:.1f},{derived}")

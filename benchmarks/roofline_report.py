@@ -1,0 +1,42 @@
+"""Deliverable (g) reporting: read experiments/dryrun/*.json and print the
+roofline table (three terms, dominant bottleneck, MFU-style ratios)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("kind") == "fl_round":
+            continue
+        recs.append(r)
+    return recs
+
+
+def main(fast: bool = True) -> list:
+    recs = load_records()
+    if not recs:
+        emit("roofline/none", 0.0, "no dry-run records; run repro.launch.dryrun")
+        return []
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        dom_t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(name, dom_t * 1e6,
+             f"dom={r['dominant']} tc={r['t_compute_s']:.2e} "
+             f"tm={r['t_memory_s']:.2e} tx={r['t_collective_s']:.2e} "
+             f"useful={r['useful_flops_fraction']:.3f} "
+             f"mem={r['peak_memory_per_device'] / 2**30:.2f}GiB")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark runner (deliverable d): one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines per the contract.
+``--full`` restores the paper's protocol sizes (hours on this 1-core CPU
+container; the default fast mode keeps every structural element)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("fig5_kl", "benchmarks.fig5_kl"),
+    ("selection_cost", "benchmarks.selection_cost"),
+    ("kernel_bench", "benchmarks.kernel_bench"),
+    ("table1_six_cases", "benchmarks.table1_six_cases"),
+    ("fig6_fig7_bias_sweep", "benchmarks.fig6_fig7_bias_sweep"),
+    ("fig8_fig9_cases_a", "benchmarks.fig8_fig9_cases_a"),
+    ("fig10_table2_proportion", "benchmarks.fig10_table2_proportion"),
+    ("dirichlet_ablation", "benchmarks.dirichlet_ablation"),
+    ("roofline_report", "benchmarks.roofline_report"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    import importlib
+    failures = []
+    for name, modname in SUITES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod = importlib.import_module(modname)
+            mod.main(fast=not args.full)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print("# FAILED:", failures)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

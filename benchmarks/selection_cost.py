@@ -1,0 +1,43 @@
+"""Paper §V complexity claim: label-wise selection runs on N scalars
+(O(N log N)) vs pairwise weight-distance clustering (O(N²·|M|)).  Microbench
+of both server-side selection paths over growing client counts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_strategy, histogram
+from .common import emit, timeit_us
+
+
+def pairwise_weight_clustering(weights: jax.Array, n_select: int) -> jax.Array:
+    """Baseline: the O(N²) pairwise-distance medoid selection prior FL
+    clustering work uses on flattened model weights (N × |M|)."""
+    d2 = jnp.sum((weights[:, None, :] - weights[None, :, :]) ** 2, axis=-1)
+    centrality = d2.sum(axis=1)
+    return jnp.argsort(centrality)[:n_select]
+
+
+def main(fast: bool = True) -> dict:
+    key = jax.random.PRNGKey(0)
+    rows = {}
+    sizes = (100, 400) if fast else (100, 400, 1600, 6400)
+    model_dim = 2_000 if fast else 20_000
+    for n in sizes:
+        labels = jax.random.randint(key, (n, 290), 0, 10)
+        hists = histogram(labels, 10)
+        strat = jax.jit(lambda k, h: get_strategy("labelwise")(k, h, 30).mask)
+        us_label = timeit_us(lambda: strat(key, hists).block_until_ready())
+        weights = jax.random.normal(key, (n, model_dim))
+        pw = jax.jit(lambda w: pairwise_weight_clustering(w, 30))
+        us_pair = timeit_us(lambda: pw(weights).block_until_ready(), n=3)
+        rows[n] = (us_label, us_pair)
+        emit(f"selection/labelwise_n{n}", us_label, f"clients={n}")
+        emit(f"selection/pairwise_n{n}", us_pair,
+             f"clients={n} speedup={us_pair / us_label:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Quickstart: label-wise clustering FL vs vanilla FedAvg on biased clients.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+70% of clients hold a single class (the paper's worst-case bias); watch the
+label-wise selection hold a stable convergence curve while random selection
+oscillates (paper Figs. 6–7).
+"""
+import numpy as np
+
+from repro.configs.paper_cnn import FLConfig
+from repro.core import bias_mix_plan
+from repro.fl import run_fl
+
+
+def main():
+    cfg = FLConfig(num_clients=20, clients_per_round=8, global_epochs=6,
+                   local_epochs=2, batch_size=16)
+    plan = bias_mix_plan(seed=0, num_clients=cfg.num_clients, p_bias=0.7,
+                         n_min=24, n_max=64)
+
+    print("== label-wise clustering (the paper) ==")
+    h_label = run_fl(plan, cfg, strategy="labelwise", verbose=True)
+    print("== vanilla FedAvg (random selection) ==")
+    h_rand = run_fl(plan, cfg, strategy="random", verbose=True)
+
+    print(f"\nmean accuracy: labelwise={np.mean(h_label.accuracy):.4f}  "
+          f"random={np.mean(h_rand.accuracy):.4f}")
+    print(f"final accuracy: labelwise={h_label.final_accuracy:.4f}  "
+          f"random={h_rand.final_accuracy:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""The paper's six non-IID cases (§III) under vanilla FedAvg — reproduces the
+Table-I structure: A-cases train partially, B-cases collapse to ~chance,
+IID converges.
+
+    PYTHONPATH=src python examples/six_noniid_cases.py
+"""
+from repro.configs.paper_cnn import FLConfig
+from repro.core import CASES, case_label_plan
+from repro.fl import run_fl
+
+
+def main():
+    cfg = FLConfig(num_clients=16, clients_per_round=6, global_epochs=5,
+                   local_epochs=2, batch_size=16)
+    print(f"{'case':10s} {'final_acc':>9s} {'final_loss':>10s}")
+    for case in CASES:
+        plan = case_label_plan(case, seed=0, num_rounds=cfg.global_epochs,
+                               num_clients=cfg.num_clients,
+                               samples_per_client=48, majority=33)
+        h = run_fl(plan, cfg, strategy="random")
+        print(f"{case:10s} {h.final_accuracy:9.4f} {h.loss[-1]:10.4f}")
+
+
+if __name__ == "__main__":
+    main()

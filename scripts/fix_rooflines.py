@@ -1,0 +1,52 @@
+"""Recompute scan-trip-corrected roofline terms for stored dry-run JSONs
+(see repro.launch.roofline.correct_terms; newly produced records already
+carry the correction — this upgrades older ones in place).
+
+    PYTHONPATH=src python scripts/fix_rooflines.py
+"""
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+from repro.launch.roofline import correct_terms
+from repro.launch.steps import config_for_shape
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def main():
+    n = 0
+    for path in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("kind") == "fl_round":
+            continue
+        shape = SHAPES[r["shape"]]
+        cfg = config_for_shape(get_config(r["arch"]), shape)
+        if r.get("overrides"):
+            import dataclasses
+            cfg = dataclasses.replace(cfg, **r["overrides"])
+        corr = correct_terms(r["flops_per_device"], r["bytes_per_device"],
+                             r["collective_bytes_per_device"], cfg, shape,
+                             r["chips"], r["params"],
+                             microbatches=r.get("microbatches"))
+        r.update(corr)
+        r["t_compute_s"] = corr["flops_per_device_corrected"] / PEAK_FLOPS_BF16
+        r["t_memory_s"] = corr["bytes_per_device_corrected"] / HBM_BW
+        r["t_collective_s"] = (corr["collective_bytes_per_device_corrected"]
+                               / ICI_BW_PER_LINK)
+        terms = {"compute": r["t_compute_s"], "memory": r["t_memory_s"],
+                 "collective": r["t_collective_s"]}
+        r["dominant"] = max(terms, key=terms.get)
+        total = corr["flops_per_device_corrected"] * r["chips"]
+        r["useful_flops_fraction"] = r["model_flops"] / total if total else 0.0
+        with open(path, "w") as f:
+            json.dump(r, f, indent=1)
+        n += 1
+    print(f"corrected {n} records")
+
+
+if __name__ == "__main__":
+    main()

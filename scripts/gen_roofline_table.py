@@ -1,0 +1,61 @@
+"""Render EXPERIMENTS.md roofline tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python scripts/gen_roofline_table.py [--mesh 16x16]
+"""
+import argparse
+import glob
+import json
+import os
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt(x, unit=""):
+    for scale, suf in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if abs(x) >= scale:
+            return f"{x / scale:.2f}{suf}{unit}"
+    return f"{x:.2f}{unit}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tagged", action="store_true",
+                    help="include tagged (perf-iteration) records")
+    args = ap.parse_args()
+
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        base = os.path.basename(p)[:-5]
+        parts = base.split("__")
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("kind") == "fl_round":
+            continue
+        tag = parts[3] if len(parts) > 3 else ""
+        if (tag != "") != args.tagged:
+            continue
+        if r["mesh"] != args.mesh:
+            continue
+        r["tag"] = tag
+        recs.append(r)
+
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9, r.get("tag", "")))
+    print(f"| arch | shape{' | tag' if args.tagged else ''} | t_compute (s) | "
+          f"t_memory (s) | t_collective (s) | dominant | useful-FLOP frac | "
+          f"peak mem/dev | params |")
+    print("|---" * (9 + (1 if args.tagged else 0)) + "|")
+    for r in recs:
+        tagcol = f" {r['tag']} |" if args.tagged else ""
+        print(f"| {r['arch']} | {r['shape']} |{tagcol} "
+              f"{r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} | "
+              f"{r['t_collective_s']:.3e} | **{r['dominant']}** | "
+              f"{r['useful_flops_fraction']:.3f} | "
+              f"{r['peak_memory_per_device'] / 2**30:.2f} GiB | "
+              f"{fmt(r['params'])} |")
+
+
+if __name__ == "__main__":
+    main()

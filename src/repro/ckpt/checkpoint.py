@@ -1,0 +1,79 @@
+"""Flat-npz checkpointing: pytree leaves keyed by path, config as JSON.
+
+Deliberately dependency-free (no orbax in this container).  Handles bf16 by
+bit-casting to uint16 on save (npz has no bfloat16) and restoring on load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_BF16_TAG = "__bf16__"
+
+
+def _flatten_with_paths(tree: PyTree) -> Dict[str, jax.Array]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(directory: str, step: int, params: PyTree,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    arrays = {}
+    for key, leaf in _flatten_with_paths(params).items():
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arrays[_BF16_TAG + key] = arr.view(np.uint16)
+        else:
+            arrays[key] = arr
+    np.savez(path, **arrays)
+    meta = {"step": step, "extra": extra or {}}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def load_checkpoint(path: str, template: PyTree) -> Tuple[PyTree, Dict[str, Any]]:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    data = np.load(path)
+    flat = {}
+    for key in data.files:
+        if key.startswith(_BF16_TAG):
+            flat[key[len(_BF16_TAG):]] = data[key].view(jnp.bfloat16)
+        else:
+            flat[key] = data[key]
+    keys = list(_flatten_with_paths(template))
+    leaves_template, treedef = jax.tree_util.tree_flatten(template)
+    leaves = []
+    for key, tmpl in zip(keys, leaves_template):
+        arr = flat[key]
+        assert arr.shape == tmpl.shape, (key, arr.shape, tmpl.shape)
+        leaves.append(jnp.asarray(arr))
+    meta_path = path.replace(".npz", ".json")
+    meta = {}
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(f for f in os.listdir(directory)
+                   if re.match(r"ckpt_\d+\.npz$", f))
+    return os.path.join(directory, ckpts[-1]) if ckpts else None

@@ -1,0 +1,37 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+from .shapes import SHAPES, InputShape
+
+_ARCH_MODULES = {
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "arctic-480b": "arctic_480b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "whisper-tiny": "whisper_tiny",
+    "qwen3-14b": "qwen3_14b",
+    "minitron-4b": "minitron_4b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "qwen2-72b": "qwen2_72b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = ["ARCH_IDS", "get_config", "all_configs", "SHAPES", "InputShape"]

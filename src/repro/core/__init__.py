@@ -1,0 +1,19 @@
+"""repro.core — the paper's contribution (label-wise clustering FL) as
+composable JAX modules.  See DESIGN.md §1/§3."""
+from .label_stats import (histogram, label_variance, label_variance_normed,
+                          coverage, empirical_pdf, rank_remap_values,
+                          expected_coverage_per_round)
+from .kl import kl_divergence, kl_to_uniform, uniformity_score
+from .clustering import (cluster_membership, cluster_sizes, area_index,
+                         area_counts, num_areas_upper_bound,
+                         selection_priority, greedy_area_selection)
+from .selection import (SelectionResult, STRATEGIES, get_strategy,
+                        select_random, select_labelwise, select_labelwise_unnorm,
+                        select_coverage, select_kl, select_entropy, select_full)
+from .noniid import (CASES, case_label_plan, bias_mix_plan, dirichlet_plan,
+                     plan_round, SAMPLES_PER_CLIENT, MAJORITY_PER_CLIENT,
+                     MINORITY_PER_CLIENT)
+from .aggregation import (masked_mean, fedavg_aggregate, fedsgd_aggregate,
+                          interpolate, psum_aggregate, all_gather_scores)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

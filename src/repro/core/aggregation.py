@@ -1,0 +1,92 @@
+"""Server-side aggregation: FedAvg / FedSGD / masked collective forms.
+
+Two execution regimes share the same math:
+
+* **vmap simulator** (paper scale): client params/grads are stacked on a
+  leading axis; aggregation is a masked weighted mean over that axis.
+* **pod-scale SPMD** (production mesh): each pod holds one client group's
+  params; aggregation is a masked weighted ``psum`` over the ``pod`` mesh axis
+  inside shard_map — FedAvg as a collective, which is the TPU-native mapping
+  of the paper's server loop (DESIGN.md §2).
+
+The selection mask (from repro.core.selection) gates *which clients enter the
+reduction*; weights default to FedAvg's n_i/Σn_i (Eq. 1) or uniform 1/n
+(Algorithm 1 uses the uniform mean over selected clients).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+def _bcast(w: Array, leaf: Array) -> Array:
+    """Broadcast a (N,) weight vector against a (N, ...) stacked leaf."""
+    return w.reshape(w.shape + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+
+
+def masked_mean(stacked: PyTree, mask: Array, weights: Array | None = None) -> PyTree:
+    """Weighted mean over the leading (client) axis, restricted to ``mask``.
+
+    weights=None → Algorithm 1's uniform 1/n over selected clients;
+    weights=n_i  → FedAvg's Eq. (1) data-size weighting.
+    """
+    w = mask.astype(jnp.float32)
+    if weights is not None:
+        w = w * weights.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1e-12)
+    return jax.tree_util.tree_map(
+        lambda p: ((_bcast(w, p) * p).sum(axis=0) / denom).astype(p.dtype), stacked)
+
+
+def fedavg_aggregate(stacked_params: PyTree, mask: Array,
+                     num_examples: Array | None = None) -> PyTree:
+    """FedAvg: aggregate selected clients' *parameters* after local training."""
+    return masked_mean(stacked_params, mask, num_examples)
+
+
+def fedsgd_aggregate(stacked_grads: PyTree, mask: Array,
+                     num_examples: Array | None = None) -> PyTree:
+    """FedSGD: aggregate selected clients' single-step *gradients*."""
+    return masked_mean(stacked_grads, mask, num_examples)
+
+
+def interpolate(global_params: PyTree, aggregated: PyTree, server_lr: float = 1.0) -> PyTree:
+    """θ ← θ + η_s (θ̄ − θ).  η_s = 1 reduces to the paper's broadcast-the-mean."""
+    return jax.tree_util.tree_map(
+        lambda g, a: (g + server_lr * (a - g)).astype(g.dtype), global_params, aggregated)
+
+
+# ---------------------------------------------------------------------------
+# SPMD (shard_map) forms — client axis is a mesh axis, typically "pod".
+# ---------------------------------------------------------------------------
+
+def psum_aggregate(params: PyTree, my_mask: Array, axis_name: str,
+                   my_weight: Array | None = None) -> PyTree:
+    """Masked weighted all-reduce of per-shard client params over ``axis_name``.
+
+    Each shard contributes mask·w·θ; the denominator psum makes the result the
+    FedAvg mean over *selected* shards, replicated to all shards (= server
+    broadcast, fused into the same collective pair).
+    """
+    w = my_mask.astype(jnp.float32)
+    if my_weight is not None:
+        w = w * my_weight.astype(jnp.float32)
+    denom = jnp.maximum(jax.lax.psum(w, axis_name), 1e-12)
+    # The reduction runs in each leaf's own dtype so a bf16 delta tree halves
+    # the cross-client all-reduce bytes (§Perf FL-round lever); the mean is
+    # finished in f32.
+    return jax.tree_util.tree_map(
+        lambda p: (jax.lax.psum(p * w.astype(p.dtype), axis_name)
+                   .astype(jnp.float32) / denom).astype(p.dtype),
+        params)
+
+
+def all_gather_scores(score: Array, axis_name: str) -> Array:
+    """Gather every client group's selection statistic (a scalar) — the cheap
+    server step of Algorithm 1 (N scalars, not N models)."""
+    return jax.lax.all_gather(score, axis_name)

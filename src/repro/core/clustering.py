@@ -1,0 +1,75 @@
+"""Label-wise clustering topology (paper §IV-A/B).
+
+Clusters are *label-membership* sets: C_k = {clients i : class k ∈ ℒ_i}.
+Their intersection pattern partitions clients into areas A_p; per Fig. 3 the
+area index counts *down* with coverage (A_1 = clients holding every label in
+play, A_q = single-label clients), and the selection priority is
+A_1 > A_2 > … > A_{n(ℒ)−1} (higher coverage first), tie-broken by the Eq. (3)
+variance score.  §IV-B bounds the number of areas by F(τ) = τ² − τ + 1.
+
+Everything operates on the (N, C) histogram matrix — no pairwise distances, no
+O(N²): this is the paper's efficiency claim vs weight-space clustering.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .label_stats import coverage, label_variance_normed
+
+Array = jax.Array
+
+
+def cluster_membership(hists: Array) -> Array:
+    """(N, C) bool: membership[i, k] ⇔ client i ∈ C_k (holds class k)."""
+    return hists > 0
+
+
+def cluster_sizes(hists: Array) -> Array:
+    """n(C_k) for every label cluster k."""
+    return cluster_membership(hists).sum(axis=-2).astype(jnp.int32)
+
+
+def area_index(hists: Array, num_active_labels: Array | int | None = None) -> Array:
+    """A_p index per client: p = q − coverage_i + 1  (A_1 = full coverage).
+
+    ``num_active_labels`` q defaults to the number of classes present anywhere
+    in this round's client population (n(ℒ^(T))).
+    """
+    cov = coverage(hists)
+    if num_active_labels is None:
+        num_active_labels = (hists > 0).any(axis=-2).sum(axis=-1)
+    q = jnp.asarray(num_active_labels, dtype=jnp.int32)
+    return (q - cov + 1).astype(jnp.int32)
+
+
+def area_counts(hists: Array, num_classes: int) -> Array:
+    """Histogram of clients per area index p ∈ {1..C} (index 0 unused)."""
+    p = area_index(hists, None)
+    return jnp.zeros(num_classes + 2, jnp.int32).at[jnp.clip(p, 0, num_classes + 1)].add(1)
+
+
+def num_areas_upper_bound(tau: Array | int) -> Array:
+    """Paper Eq. (4): sup n(A^(T)) = F(τ) = 1 + τ(τ−1) = τ² − τ + 1."""
+    tau = jnp.asarray(tau)
+    return 1 + tau * (tau - 1)
+
+
+def selection_priority(hists: Array) -> Array:
+    """Total-order key implementing A_1 > A_2 > … with Eq. (3) tie-break.
+
+    Returns a float score (higher = select first): coverage dominates (scaled
+    past any possible variance term), σ²/n_i breaks ties inside an area.
+    """
+    cov = coverage(hists).astype(jnp.float32)
+    var_n = label_variance_normed(hists)
+    c = hists.shape[-1]
+    # σ² of C rank values is < C²; /n keeps it < C² — scale coverage safely past it.
+    return cov * (4.0 * c * c) + var_n
+
+
+def greedy_area_selection(hists: Array, n_select: int) -> Array:
+    """Materialize s_T (paper Eq. 3 loop): indices of the top-``n_select``
+    clients by area priority.  Single argsort — O(N log N), matching §V."""
+    order = jnp.argsort(-selection_priority(hists))
+    return order[:n_select]

@@ -1,0 +1,49 @@
+"""Training-free client evaluation via KL divergence (paper §IV-C, Eq. 5).
+
+The paper scores a client's label distribution against the *ideal* uniform
+distribution: a client whose p(L_i) is close to U(0, C−1) is expected to train
+well (Fig. 5: the U(0,9) client beats the N(5,1)/mixture/gamma clients).
+
+Paper Eq. (5) writes KL(p(L_i) ‖ p(L_i')) with the uniform on the left for the
+worked example; both directions are provided.  ``kl_to_uniform`` (reverse,
+uniform-left) matches the paper's worked numbers in spirit; ``forward`` is the
+conventional D_KL(p ‖ u) = log C − H(p), which is what the ``kl`` selection
+strategy minimizes (0 iff exactly uniform).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .label_stats import empirical_pdf
+
+Array = jax.Array
+
+
+def kl_divergence(p: Array, q: Array) -> Array:
+    """D_KL(p ‖ q) = Σ p log(p/q), elementwise-safe (0·log 0 := 0)."""
+    safe = jnp.where(p > 0, p * (jnp.log(jnp.maximum(p, 1e-30)) - jnp.log(jnp.maximum(q, 1e-30))), 0.0)
+    return safe.sum(axis=-1)
+
+
+def kl_to_uniform(hist: Array, direction: str = "forward", eps: float = 1e-9) -> Array:
+    """KL between a client's empirical label pdf and the uniform pdf.
+
+    direction='forward'  → D_KL(p(L_i) ‖ U): log C − H(p), finite always.
+    direction='reverse'  → D_KL(U ‖ p(L_i)): the paper's Eq. 5 orientation;
+        needs ε-smoothing (a missing class makes it +∞ un-smoothed, which is
+        exactly the paper's point — such clients are maximally penalized).
+    """
+    p = empirical_pdf(hist, eps=eps)
+    c = hist.shape[-1]
+    u = jnp.full_like(p, 1.0 / c)
+    if direction == "forward":
+        return kl_divergence(p, u)
+    if direction == "reverse":
+        return kl_divergence(u, p)
+    raise ValueError(f"unknown direction {direction!r}")
+
+
+def uniformity_score(hist: Array) -> Array:
+    """Convenience: higher = more uniform = better client (−KL_forward)."""
+    return -kl_to_uniform(hist, direction="forward")

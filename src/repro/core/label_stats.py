@@ -1,0 +1,82 @@
+"""Per-client label statistics — the paper's §III/§IV measurement layer.
+
+The paper treats class labels as *independent semantic entities*: before any
+statistic is computed, the labels present in a client's multiset are remapped
+to sequential ranks (``{1, 5, 10} ≡ {0, 1, 2}``, §III-A), so the statistics are
+invariant to the numeric identity of the class ids.  Everything here consumes
+**label histograms** ``h ∈ N^C`` (counts per class id), which is the quantity a
+client can cheaply report to the server without revealing raw data — this is
+exactly what Algorithm 1 transmits (a single scalar derived from it).
+
+All functions are pure jnp, jit- and vmap-safe (fixed shapes, no host sync).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def histogram(labels: Array, num_classes: int, valid: Array | None = None) -> Array:
+    """Histogram of integer ``labels`` over ``num_classes`` bins.
+
+    ``valid`` optionally masks padding entries (FL clients have ragged n_i;
+    we pad to a fixed length for SPMD and mask).
+    Uses a one-hot contraction rather than scatter so it maps onto the MXU
+    (see kernels/label_hist for the tiled Pallas version of the same op).
+    """
+    labels = labels.astype(jnp.int32)
+    one_hot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    if valid is not None:
+        one_hot = one_hot * valid.astype(jnp.float32)[..., None]
+    return one_hot.sum(axis=-2)
+
+
+def rank_remap_values(hist: Array) -> Array:
+    """Sequential rank of each present class (absent classes get rank 0).
+
+    Paper §III-A: ``L = {1, 5, 10}`` is treated as ``{0, 1, 2}``; the rank is
+    the statistic-bearing "value" of each label.
+    """
+    present = (hist > 0).astype(jnp.float32)
+    ranks = jnp.cumsum(present, axis=-1) - 1.0
+    return ranks * present  # absent bins don't matter (zero count) but keep them finite
+
+
+def label_variance(hist: Array) -> Array:
+    """σ²(L_i) of the rank-remapped label multiset (paper's selection statistic).
+
+    A single-label client has σ² = 0 (Algorithm 1 filters these out); a client
+    whose histogram is uniform over many classes maximizes σ².
+    """
+    hist = hist.astype(jnp.float32)
+    n = jnp.maximum(hist.sum(axis=-1), 1.0)
+    v = rank_remap_values(hist)
+    mean = (hist * v).sum(axis=-1) / n
+    var = (hist * (v - mean[..., None]) ** 2).sum(axis=-1) / n
+    return var
+
+
+def label_variance_normed(hist: Array) -> Array:
+    """Paper Eq. (3) score: σ²(L_i) / n_i — variance adjusted by client size."""
+    n = jnp.maximum(hist.sum(axis=-1).astype(jnp.float32), 1.0)
+    return label_variance(hist) / n
+
+
+def coverage(hist: Array) -> Array:
+    """Number of distinct labels present, n(ℒ_i) — the cluster-area rank key."""
+    return (hist > 0).sum(axis=-1).astype(jnp.int32)
+
+
+def empirical_pdf(hist: Array, eps: float = 1e-9) -> Array:
+    """p(L_i): normalized histogram with ε-smoothing (KL needs full support)."""
+    hist = hist.astype(jnp.float32) + eps
+    return hist / hist.sum(axis=-1, keepdims=True)
+
+
+def expected_coverage_per_round(hists: Array) -> Array:
+    """Union label coverage of a *set* of clients: n(∪_i ℒ_i) (paper §III-B:
+    trainability tracks the per-round union coverage, not per-client)."""
+    any_present = (hists > 0).any(axis=-2)
+    return any_present.sum(axis=-1).astype(jnp.int32)

@@ -1,0 +1,137 @@
+"""Client-selection strategies (paper Algorithm 1 + baselines + ablations).
+
+Every strategy has the signature
+
+    select(key, hists, n_select) -> SelectionResult(mask, scores)
+
+with ``hists`` the (N, C) per-client label-histogram matrix for the round.
+``mask`` is a float32 (N,) 0/1 vector of chosen clients — mask form (rather
+than gather indices) is what the sharded FL round needs: aggregation is a
+masked psum and SPMD shards cannot branch per-client.  The effective number of
+selected clients is mask.sum(); Algorithm 1's "if count < n then n = count"
+degradation (fewer than n clients have σ² ≠ 0) falls out naturally because
+invalid clients are masked to score −∞ *and* masked out of the final mask.
+
+Strategies:
+    random             — FedAvg/FedSGD baseline (uniform without replacement)
+    labelwise          — THE PAPER: filter σ²≠0, top-n by σ²(L_i)/n_i (Eq. 3)
+    labelwise_unnorm   — ablation: top-n by raw σ²(L_i)
+    coverage           — §IV-A area priority A_1 > A_2 > … (σ²/n tie-break)
+    kl                 — §IV-C: top-n by −KL(p(L_i) ‖ U) (closest to uniform)
+    full               — every client (centralized-equivalent upper baseline)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .clustering import selection_priority
+from .kl import uniformity_score
+from .label_stats import label_variance, label_variance_normed
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+@dataclass
+class SelectionResult:
+    mask: Array    # (N,) float32 ∈ {0, 1}
+    scores: Array  # (N,) float32 — the strategy's ranking statistic
+    order: Array   # (N,) int32 — clients sorted by priority (invalid last);
+                   # order[:n] are the clients the server asks to train
+
+    @property
+    def num_selected(self) -> Array:
+        return self.mask.sum()
+
+
+def _topn_mask(scores: Array, valid: Array, n_select: int):
+    """(mask, order): 0/1 mask + priority order of the top-n *valid* entries."""
+    masked = jnp.where(valid, scores, NEG_INF)
+    order = jnp.argsort(-masked)  # stable; invalid sink to the end
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    chosen = (ranks < n_select) & valid
+    return chosen.astype(jnp.float32), order.astype(jnp.int32)
+
+
+def select_random(key: Array, hists: Array, n_select: int) -> SelectionResult:
+    n = hists.shape[0]
+    scores = jax.random.uniform(key, (n,))
+    valid = hists.sum(axis=-1) > 0
+    mask, order = _topn_mask(scores, valid, n_select)
+    return SelectionResult(mask, scores, order)
+
+
+def select_labelwise(key: Array, hists: Array, n_select: int) -> SelectionResult:
+    del key  # deterministic given the round's histograms
+    scores = label_variance_normed(hists)
+    valid = label_variance(hists) > 0  # Algorithm 1: σ²(L_i) ≠ 0 gate
+    mask, order = _topn_mask(scores, valid, n_select)
+    return SelectionResult(mask, scores, order)
+
+
+def select_labelwise_unnorm(key: Array, hists: Array, n_select: int) -> SelectionResult:
+    del key
+    scores = label_variance(hists)
+    valid = scores > 0
+    mask, order = _topn_mask(scores, valid, n_select)
+    return SelectionResult(mask, scores, order)
+
+
+def select_coverage(key: Array, hists: Array, n_select: int) -> SelectionResult:
+    del key
+    scores = selection_priority(hists)
+    valid = label_variance(hists) > 0
+    mask, order = _topn_mask(scores, valid, n_select)
+    return SelectionResult(mask, scores, order)
+
+
+def select_kl(key: Array, hists: Array, n_select: int) -> SelectionResult:
+    del key
+    scores = uniformity_score(hists)
+    valid = hists.sum(axis=-1) > 0
+    mask, order = _topn_mask(scores, valid, n_select)
+    return SelectionResult(mask, scores, order)
+
+
+def select_entropy(key: Array, hists: Array, n_select: int) -> SelectionResult:
+    """Beyond-paper: Shannon entropy of p(L_i) — scale-free alternative to
+    σ²; equals log(coverage) for uniform multisets, so it orders by coverage
+    first and within-coverage balance second (≈ the §IV-A area priority
+    without the variance tie-break)."""
+    del key
+    from .label_stats import empirical_pdf
+    p = empirical_pdf(hists)
+    scores = -(p * jnp.log(jnp.maximum(p, 1e-30))).sum(-1)
+    valid = hists.sum(axis=-1) > 0
+    mask, order = _topn_mask(scores, valid, n_select)
+    return SelectionResult(mask, scores, order)
+
+
+def select_full(key: Array, hists: Array, n_select: int) -> SelectionResult:
+    del key, n_select
+    valid = (hists.sum(axis=-1) > 0).astype(jnp.float32)
+    order = jnp.argsort(-valid).astype(jnp.int32)
+    return SelectionResult(valid, valid, order)
+
+
+STRATEGIES: Dict[str, Callable[[Array, Array, int], SelectionResult]] = {
+    "random": select_random,
+    "labelwise": select_labelwise,
+    "labelwise_unnorm": select_labelwise_unnorm,
+    "coverage": select_coverage,
+    "kl": select_kl,
+    "entropy": select_entropy,
+    "full": select_full,
+}
+
+
+def get_strategy(name: str) -> Callable[[Array, Array, int], SelectionResult]:
+    try:
+        return STRATEGIES[name]
+    except KeyError:
+        raise KeyError(f"unknown selection strategy {name!r}; have {sorted(STRATEGIES)}") from None

@@ -1,0 +1,7 @@
+from .synthetic import ImageDataset, TokenDataset
+from .fl_data import materialize_round, client_batches
+from .specs import input_specs, batch_specs, decode_specs, text_len
+
+__all__ = ["ImageDataset", "TokenDataset", "materialize_round",
+           "client_batches", "input_specs", "batch_specs", "decode_specs",
+           "text_len"]

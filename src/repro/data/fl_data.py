@@ -1,0 +1,48 @@
+"""Materialize FL client rounds from non-IID label plans (repro.core.noniid).
+
+A round batch is a fixed-shape SPMD-friendly structure:
+    images: (N, n_max, H, W, C)   labels: (N, n_max) int32 (−1 pad)
+    valid:  (N, n_max) bool       hists:  (N, C) f32
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import histogram
+from .synthetic import ImageDataset
+
+Array = jax.Array
+
+
+def materialize_round(ds: ImageDataset, plan_t: np.ndarray, key: Array
+                      ) -> Dict[str, Array]:
+    """plan_t: (N, n_max) int32 labels with −1 padding → round batch."""
+    labels = jnp.asarray(plan_t, jnp.int32)
+    valid = labels >= 0
+    images = ds.sample(key, labels)
+    hists = histogram(jnp.where(valid, labels, 0), ds.num_classes, valid)
+    return {"images": images, "labels": labels, "valid": valid, "hists": hists}
+
+
+def client_batches(data: Dict[str, Array], batch_size: int) -> Dict[str, Array]:
+    """Reshape (N, n_max, ...) → (N, n_batches, batch_size, ...), padding the
+    tail with invalid rows so every client has identical batch structure."""
+    n, n_max = data["labels"].shape
+    nb = -(-n_max // batch_size)
+    pad = nb * batch_size - n_max
+
+    def prep(x, fill):
+        if pad:
+            width = [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)
+            x = jnp.pad(x, width, constant_values=fill)
+        return x.reshape((n, nb, batch_size) + x.shape[2:])
+
+    return {
+        "images": prep(data["images"], 0),
+        "labels": prep(data["labels"], 0),   # padded labels masked by valid
+        "valid": prep(data["valid"], False),
+    }

@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run seam).
+
+``input_specs(cfg, shape)`` returns the exact argument structure the lowered
+step function takes — weak-type-correct, shardable, no device allocation —
+plus a parallel tree of *logical* sharding axes (repro.sharding names).
+
+Modality carve-out (brief): for [audio]/[vlm] the frontend is stubbed — the
+specs provide precomputed frame/patch embeddings of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.configs.shapes import InputShape
+from repro.models import init_caches, stack_cache_specs
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text-token count so that total sequence (patches + text) == seq_len."""
+    if cfg.arch_type == "vlm":
+        return seq_len - cfg.num_patch_tokens
+    return seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape
+                ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, tuple]]:
+    """Specs for train/prefill batches."""
+    b, s = shape.global_batch, text_len(cfg, shape.seq_len)
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    logical = {"tokens": (sh.BATCH, sh.SEQ)}
+    if shape.kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        logical["targets"] = (sh.BATCH, sh.SEQ)
+    if cfg.arch_type == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patch_tokens, cfg.vision_embed_dim), jnp.float32)
+        logical["patch_embeds"] = (sh.BATCH, None, None)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_frames, cfg.d_model), jnp.float32)
+        logical["frames"] = (sh.BATCH, None, None)
+    return specs, logical
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape
+                 ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Specs for the decode step: one token per sequence + resident caches."""
+    b = shape.global_batch
+    caches = jax.eval_shape(lambda: init_caches(cfg, b, shape.seq_len))
+    cache_logical = stack_cache_specs(cfg)
+    if cfg.is_encoder_decoder:
+        cross_logical = tuple(
+            {"k": (sh.BATCH, None, sh.KV_HEADS, None),
+             "v": (sh.BATCH, None, sh.KV_HEADS, None)}
+            for _ in range(cfg.num_layers))
+        cache_logical = {"self": cache_logical, "cross": cross_logical}
+    specs = {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32), "caches": caches}
+    logical = {"tokens": (sh.BATCH,), "caches": cache_logical}
+    return specs, logical
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    return batch_specs(cfg, shape)

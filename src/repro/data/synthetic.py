@@ -1,0 +1,92 @@
+"""Synthetic class-conditional datasets (offline stand-ins for MNIST/FMNIST).
+
+Images: class k = fixed random smooth template T_k + Gaussian noise — linearly
+separable enough for the paper's 6-layer CNN to reach high accuracy in a few
+epochs, hard enough that an untrained/collapsed model sits at chance (10%).
+Token streams: class/domain k = skewed unigram distribution over a vocab band,
+giving LM-FL the same label-skew semantics (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ImageDataset:
+    """Class-conditional image sampler."""
+    num_classes: int = 10
+    image_size: int = 28
+    channels: int = 1
+    noise: float = 0.35
+    seed: int = 1234
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        raw = rng.normal(size=(self.num_classes, self.image_size,
+                               self.image_size, self.channels))
+        # Smooth the templates (local 5×5 box filter) so classes have
+        # spatially-coherent structure a conv net favours.
+        k = 5
+        pad = k // 2
+        padded = np.pad(raw, ((0, 0), (pad, pad), (pad, pad), (0, 0)), mode="wrap")
+        smooth = np.zeros_like(raw)
+        for dy in range(k):
+            for dx in range(k):
+                smooth += padded[:, dy:dy + self.image_size, dx:dx + self.image_size]
+        smooth /= k * k
+        smooth = (smooth - smooth.mean()) / (smooth.std() + 1e-9)
+        self.templates = jnp.asarray(smooth, jnp.float32)
+
+    def sample(self, key: Array, labels: Array) -> Array:
+        """labels: (...,) int32 → images (..., H, W, C); label −1 → zeros."""
+        safe = jnp.maximum(labels, 0)
+        base = self.templates[safe]
+        noise = jax.random.normal(key, base.shape) * self.noise
+        imgs = base + noise
+        return imgs * (labels >= 0)[..., None, None, None]
+
+    def test_set(self, n_per_class: int = 50, seed: int = 999) -> Tuple[Array, Array]:
+        labels = jnp.tile(jnp.arange(self.num_classes), n_per_class)
+        imgs = self.sample(jax.random.PRNGKey(seed), labels)
+        return imgs, labels
+
+
+@dataclasses.dataclass
+class TokenDataset:
+    """Domain-conditional unigram token sampler for LM-style FL clients.
+
+    Domain k concentrates 85% of its mass on a contiguous vocab band; a
+    next-token model trained on one domain fails on others — the LM analogue
+    of label skew."""
+    num_domains: int = 10
+    vocab_size: int = 512
+    seq_len: int = 64
+    concentration: float = 0.85
+    seed: int = 77
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        band = self.vocab_size // self.num_domains
+        probs = np.full((self.num_domains, self.vocab_size),
+                        (1 - self.concentration) / (self.vocab_size - band))
+        for k in range(self.num_domains):
+            sl = slice(k * band, (k + 1) * band)
+            w = rng.dirichlet(np.ones(band)) * self.concentration
+            probs[k, sl] = w
+        self.log_probs = jnp.asarray(np.log(probs), jnp.float32)
+
+    def sample(self, key: Array, domains: Array) -> Array:
+        """domains: (...,) int32 → token sequences (..., seq_len) int32."""
+        safe = jnp.maximum(domains, 0)
+        lp = self.log_probs[safe]
+        toks = jax.random.categorical(
+            key, lp[..., None, :], axis=-1,
+            shape=safe.shape + (self.seq_len,))
+        return toks.astype(jnp.int32)

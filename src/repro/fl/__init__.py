@@ -1,0 +1,8 @@
+from .client import local_train, local_gradient
+from .round import make_fl_round
+from .loop import run_fl, FLHistory, success_rate, cnn_batch_loss
+from .sharded import make_sharded_fl_round, topn_mask_from_scores
+
+__all__ = ["local_train", "local_gradient", "make_fl_round", "run_fl",
+           "FLHistory", "success_rate", "cnn_batch_loss",
+           "make_sharded_fl_round", "topn_mask_from_scores"]

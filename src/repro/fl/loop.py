@@ -1,0 +1,83 @@
+"""Host-side FL training loop: rounds × (materialize → select → train →
+aggregate → evaluate).  This is the end-to-end driver the paper's experiments
+(§VI) run on; examples/ and benchmarks/ call into it."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan_round
+from repro.data import ImageDataset, client_batches, materialize_round
+from repro.models import cnn_init, cnn_loss
+from .round import make_fl_round
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass
+class FLHistory:
+    accuracy: List[float]
+    loss: List[float]
+    num_selected: List[float]
+    wall_s: float
+
+    @property
+    def final_accuracy(self) -> float:
+        return self.accuracy[-1]
+
+    def summary(self) -> Dict[str, float]:
+        return {"final_accuracy": self.accuracy[-1], "final_loss": self.loss[-1],
+                "rounds": len(self.accuracy), "wall_s": self.wall_s}
+
+
+def cnn_batch_loss(params: PyTree, batch: Dict[str, Array]):
+    return cnn_loss(params, batch["images"], batch["labels"], batch["valid"])
+
+
+def evaluate_cnn(params: PyTree, test_images: Array, test_labels: Array):
+    loss, m = cnn_loss(params, test_images, test_labels)
+    return float(loss), float(m["accuracy"])
+
+
+def run_fl(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
+           aggregation: Optional[str] = None, rounds: Optional[int] = None,
+           ds: Optional[ImageDataset] = None, seed: Optional[int] = None,
+           verbose: bool = False) -> FLHistory:
+    """Run FL on the paper CNN over a non-IID label plan.  Returns history."""
+    ds = ds or ImageDataset()
+    seed = fl_cfg.seed if seed is None else seed
+    rounds = rounds or fl_cfg.global_epochs
+    key = jax.random.PRNGKey(seed)
+    params = cnn_init(jax.random.fold_in(key, 1), num_classes=ds.num_classes,
+                      image_size=ds.image_size, channels=ds.channels)
+    fl_round = make_fl_round(cnn_batch_loss, fl_cfg, strategy, aggregation)
+    test_x, test_y = ds.test_set()
+    eval_jit = jax.jit(lambda p: cnn_loss(p, test_x, test_y))
+
+    hist_acc, hist_loss, hist_sel = [], [], []
+    t0 = time.time()
+    for t in range(rounds):
+        kt = jax.random.fold_in(key, 1000 + t)
+        data = materialize_round(ds, plan_round(plan, t), jax.random.fold_in(kt, 0))
+        batches = client_batches(data, fl_cfg.batch_size)
+        params, info = fl_round(params, batches, data["hists"],
+                                jax.random.fold_in(kt, 1))
+        loss, m = eval_jit(params)
+        hist_acc.append(float(m["accuracy"]))
+        hist_loss.append(float(loss))
+        hist_sel.append(float(info["num_selected"]))
+        if verbose:
+            print(f"  round {t + 1:3d}/{rounds}: acc={hist_acc[-1]:.4f} "
+                  f"loss={hist_loss[-1]:.4f} selected={hist_sel[-1]:.0f}")
+    return FLHistory(hist_acc, hist_loss, hist_sel, time.time() - t0)
+
+
+def success_rate(histories: List[FLHistory], threshold: float = 0.2) -> float:
+    """Paper Table II: fraction of trials whose final accuracy > threshold."""
+    return float(np.mean([h.final_accuracy > threshold for h in histories]))

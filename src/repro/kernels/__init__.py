@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the framework's perf-critical compute (DESIGN.md §6).
+
+All kernels use explicit BlockSpec VMEM tiling and are validated against
+pure-jnp oracles (ref.py) with interpret=True on CPU; on a real TPU set
+interpret=False.  The dry-run path keeps the XLA implementations (Pallas TPU
+custom-calls do not compile on the CPU backend).
+"""
+from .weighted_agg.weighted_agg import weighted_agg_kernel
+from .weighted_agg.ops import aggregate_params, normalized_scales
+from .weighted_agg.ref import weighted_agg_ref
+from .label_hist.label_hist import label_hist_kernel
+from .label_hist.ops import client_statistics
+from .label_hist.ref import label_hist_ref
+from .flash_attention.flash_attention import flash_attention
+from .flash_attention.ops import gqa_flash_attention
+from .flash_attention.ref import attention_ref
+from .ssd_scan.ssd_scan import ssd_scan
+from .ssd_scan.ops import ssd_apply
+from .ssd_scan.ref import ssd_ref
+
+__all__ = ["weighted_agg_kernel", "aggregate_params", "normalized_scales",
+           "weighted_agg_ref", "label_hist_kernel", "client_statistics",
+           "label_hist_ref", "flash_attention", "gqa_flash_attention",
+           "attention_ref", "ssd_scan", "ssd_apply", "ssd_ref"]

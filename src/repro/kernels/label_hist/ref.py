@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the per-client label-histogram kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def label_hist_ref(labels: jax.Array, num_classes: int,
+                   valid: jax.Array | None = None) -> jax.Array:
+    """labels: (B, n) int32 → (B, C) f32 counts (valid mask optional)."""
+    one_hot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    if valid is not None:
+        one_hot = one_hot * valid.astype(jnp.float32)[..., None]
+    return one_hot.sum(axis=-2)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the chunked SSD kernel: the plain sequential
+state-space recurrence (identical math to repro.models.layers._ssd_reference,
+restated here in the kernel's flattened (BH, S, …) layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array):
+    """x: (BH, S, P); dt: (BH, S); A: (BH,); B/C: (BH, S, N).
+    Returns (y: (BH, S, P), final_state: (BH, P, N))."""
+    bh, s, p = x.shape
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp       # (BH,P), (BH,), (BH,N), (BH,N)
+        decay = jnp.exp(dtt * A)[:, None, None]
+        upd = jnp.einsum("b,bp,bn->bpn", dtt, xt, bt)
+        state = state * decay + upd
+        y = jnp.einsum("bpn,bn->bp", state, ct)
+        return state, y
+
+    s0 = jnp.zeros((bh, p, B.shape[-1]), jnp.float32)
+    final, ys = jax.lax.scan(
+        step, s0, (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+                   jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+                   jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+                   jnp.moveaxis(C, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(ys, 0, 1), final

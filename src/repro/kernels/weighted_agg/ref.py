@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused FL aggregation kernel.
+
+y = Σ_k (mask_k · w_k / Σ_j mask_j·w_j) · θ_k over K stacked client params —
+the FedAvg reduction (repro.core.aggregation.masked_mean on one leaf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_agg_ref(stacked: jax.Array, weights: jax.Array,
+                     mask: jax.Array) -> jax.Array:
+    """stacked: (K, N) — K clients × flattened params; weights/mask: (K,)."""
+    w = (weights * mask).astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1e-12)
+    return ((w[:, None] * stacked.astype(jnp.float32)).sum(0) / denom
+            ).astype(stacked.dtype)

@@ -1,0 +1,5 @@
+from .mesh import (make_production_mesh, make_debug_mesh, PEAK_FLOPS_BF16,
+                   HBM_BW, ICI_BW_PER_LINK)
+
+__all__ = ["make_production_mesh", "make_debug_mesh", "PEAK_FLOPS_BF16",
+           "HBM_BW", "ICI_BW_PER_LINK"]

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) on the production meshes, record memory/cost
+analysis and roofline terms.
+
+MUST be executed as its own process (the XLA flag above has to precede any
+jax initialization — do not import this module from a live jax session):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --fl-round       # paper's FL step
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import sharding as sh
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import extract_roofline, collective_bytes
+from repro.launch.steps import (arch_shape_applicable, config_for_shape,
+                                default_microbatches, make_prefill_step,
+                                make_serve_step, make_train_step, param_count)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)
+
+
+def build_step(cfg, mesh, shape, microbatches=None, kv_policy="seq", tp=True,
+               seq_parallel=False):
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, shape, microbatches, tp=tp,
+                               seq_parallel=seq_parallel)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape)
+    return make_serve_step(cfg, mesh, shape, kv_policy=kv_policy)
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               microbatches=None, save: bool = True, verbose: bool = True,
+               kv_policy: str = "seq", cfg_overrides=None, tag: str = "",
+               tp: bool = True, seq_parallel: bool = False,
+               donate: bool = False):
+    shape = SHAPES[shape_name]
+    cfg = config_for_shape(get_config(arch), shape)
+    if cfg_overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    ok, note = arch_shape_applicable(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, in_sh, out_sh, args, rules = build_step(cfg, mesh, shape, microbatches,
+                                                kv_policy, tp, seq_parallel)
+    donate_args = ()
+    if donate:
+        donate_args = (0, 1) if shape.kind == "train" else (
+            (2,) if shape.kind == "decode" else ())
+    with mesh:
+        with sh.shard_ctx(mesh, rules):
+            kw = dict(in_shardings=in_sh, donate_argnums=donate_args)
+            if out_sh is not None:
+                kw["out_shardings"] = out_sh
+            jitted = jax.jit(fn, **kw)
+            lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    t1 = time.time()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    rl = extract_roofline(arch, shape, mesh_name(mesh),
+                          mesh.devices.size, compiled, hlo, cfg,
+                          microbatches=microbatches)
+    record = rl.to_dict()
+    record.update({
+        "note": note,
+        "kv_policy": kv_policy,
+        "overrides": cfg_overrides or {},
+        "params": param_count(cfg),
+        "microbatches": (microbatches or default_microbatches(cfg, shape)),
+        "compile_s": t1 - t0,
+        "memory_analysis": {
+            k: float(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")},
+    })
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name(mesh)}] "
+              f"compile {t1 - t0:.1f}s  "
+              f"flops/dev {rl.flops_per_device:.3e}  "
+              f"bytes/dev {rl.bytes_per_device:.3e}  "
+              f"coll/dev {rl.collective_bytes_per_device:.3e}  "
+              f"peak-mem/dev {rl.peak_memory_per_device / 2**30:.2f} GiB  "
+              f"dominant={rl.dominant}")
+        print("  memory_analysis:", record["memory_analysis"])
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fname = f"{arch}__{shape_name}__{mesh_name(mesh)}{suffix}.json"
+        with open(os.path.join(OUT_DIR, fname), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def dryrun_fl_round(multi_pod: bool = True, save: bool = True,
+                    agg_dtype_name: str = "float32"):
+    """Lower the paper's pod-scale FL aggregation round (label-stat gather +
+    masked psum over the ``pod`` axis) — proves the technique shards."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.fl import make_sharded_fl_round
+    from repro.models import cnn_init, cnn_loss
+    from repro.optim import sgd, apply_updates
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    client_axis = "pod" if multi_pod else "data"
+    n_groups = mesh.shape[client_axis]
+
+    def local_step(params, batch):
+        # Per-shard leaves keep the leading group-local client axis; fold it
+        # into the sample batch for the CNN.
+        imgs = batch["images"].reshape((-1,) + batch["images"].shape[2:])
+        labels = batch["labels"].reshape(-1)
+        valid = batch["valid"].reshape(-1)
+
+        def l(p):
+            return cnn_loss(p, imgs, labels, valid)[0]
+        grads = jax.grad(l)(params)
+        return jax.tree_util.tree_map(
+            lambda p, g: p - 1e-3 * g, params, grads)
+
+    params_pspec = jax.tree_util.tree_map(
+        lambda _: P(), cnn_init(jax.random.PRNGKey(0)))
+    # Intra-group sample sharding uses an axis the client axis doesn't take.
+    inner = "data" if client_axis == "pod" else "model"
+    batch_pspec = {"images": P(inner), "labels": P(inner), "valid": P(inner)}
+    round_fn = make_sharded_fl_round(
+        mesh, client_axis, local_step, n_select=max(1, n_groups // 2),
+        num_classes=10, params_pspec=params_pspec, batch_pspec=batch_pspec,
+        agg_dtype=jnp.bfloat16 if agg_dtype_name == "bfloat16" else jnp.float32)
+
+    per_group = 64
+    params_abs = jax.eval_shape(lambda k: cnn_init(k), jax.random.PRNGKey(0))
+    batch_abs = {
+        "images": jax.ShapeDtypeStruct((n_groups, per_group, 28, 28, 1), jnp.float32),
+        "labels": jax.ShapeDtypeStruct((n_groups, per_group), jnp.int32),
+        "valid": jax.ShapeDtypeStruct((n_groups, per_group), jnp.bool_),
+    }
+    labels_abs = jax.ShapeDtypeStruct((n_groups, 290), jnp.int32)
+    valid_abs = jax.ShapeDtypeStruct((n_groups, 290), jnp.bool_)
+    with mesh:
+        lowered = jax.jit(round_fn).lower(params_abs, batch_abs, labels_abs, valid_abs)
+        compiled = lowered.compile()
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+    mem = compiled.memory_analysis()
+    record = {
+        "kind": "fl_round", "mesh": mesh_name(mesh), "client_axis": client_axis,
+        "agg_dtype": agg_dtype_name,
+        "collectives_by_kind": colls,
+        "temp_bytes": float(getattr(mem, "temp_size_in_bytes", 0)),
+    }
+    print(f"[fl_round × {mesh_name(mesh)}] collectives: {colls}")
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        suffix = "" if agg_dtype_name == "float32" else f"__{agg_dtype_name}"
+        with open(os.path.join(OUT_DIR,
+                               f"fl_round__{mesh_name(mesh)}{suffix}.json"), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fl-round", action="store_true")
+    ap.add_argument("--fl-agg-dtype", choices=["float32", "bfloat16"],
+                    default="float32")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--kv-policy", choices=["seq", "heads"], default="seq")
+    ap.add_argument("--remat-policy", choices=["full", "dots"], default=None)
+    ap.add_argument("--attention-impl", choices=["dense", "chunked"], default=None)
+    ap.add_argument("--fsdp", choices=["on", "off"], default=None)
+    ap.add_argument("--tp", choices=["on", "off"], default="on")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--donate", action="store_true",
+                    help="donate params/opt (train) or caches (decode)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.fl_round:
+        dryrun_fl_round(multi_pod=args.multi_pod, save=not args.no_save,
+                        agg_dtype_name=args.fl_agg_dtype)
+        return 0
+
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        pairs = [(args.arch, args.shape)]
+
+    overrides = {}
+    if args.remat_policy:
+        overrides["remat_policy"] = args.remat_policy
+    if args.attention_impl:
+        overrides["attention_impl"] = args.attention_impl
+    if args.fsdp:
+        overrides["fsdp"] = args.fsdp == "on"
+
+    failures = []
+    for a, s in pairs:
+        try:
+            dryrun_one(a, s, multi_pod=args.multi_pod,
+                       microbatches=args.microbatches, save=not args.no_save,
+                       kv_policy=args.kv_policy, tag=args.tag,
+                       cfg_overrides=overrides or None, tp=args.tp == "on",
+                       seq_parallel=args.seq_parallel, donate=args.donate)
+        except Exception:
+            traceback.print_exc()
+            failures.append((a, s))
+    if failures:
+        print("FAILED:", failures)
+        return 1
+    print(f"dry-run OK for {len(pairs)} pair(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,256 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+    compute    = FLOPs_per_device / peak_FLOP/s          (s)
+    memory     = bytes_per_device / HBM_bw               (s)
+    collective = collective_bytes_per_device / ICI_bw    (s)
+
+``cost_analysis()`` reports the per-device (per-SPMD-program) FLOPs and bytes
+accessed.  Collective bytes are NOT in cost_analysis: we parse the optimized
+HLO and sum the *output* operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (output size ≈ bytes moved
+per device for ring algorithms; all-reduce counted 2× for the reduce+broadcast
+phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Tuple
+
+from .mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,512,128]{2,1,0:T(8,128)(2,1)}  or tuple shapes
+_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes summed over the module (one device's
+    program).  ``-done`` ops are skipped (the ``-start`` carries the shape)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if m.group(0).rstrip("(").endswith("-done("):
+            continue
+        mult = 2 if kind == "all-reduce" else 1  # reduce + broadcast phases
+        out[kind] += mult * _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float              # raw HLO (scan bodies once)
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives_by_kind: Dict[str, int]
+    peak_memory_per_device: float
+    model_flops: float  # 6·N·D (dense) / 6·N_active·D (MoE), global
+    correction: dict = dataclasses.field(default_factory=dict)
+
+    def _c(self, key, raw):
+        return self.correction.get(key, raw)
+
+    @property
+    def t_compute(self) -> float:
+        return self._c("flops_per_device_corrected",
+                       self.flops_per_device) / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self._c("bytes_per_device_corrected",
+                       self.bytes_per_device) / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self._c("collective_bytes_per_device_corrected",
+                       self.collective_bytes_per_device) / ICI_BW_PER_LINK
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (scan-corrected FLOPs summed over chips) — catches
+        remat recompute and redundancy waste."""
+        total = self._c("flops_per_device_corrected",
+                        self.flops_per_device) * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collectives_by_kind": self.collectives_by_kind,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            **self.correction,
+        }
+
+
+def active_param_count(cfg) -> int:
+    """Active params per token: full params minus non-routed expert weight."""
+    from .steps import param_count
+    n = param_count(cfg)
+    if cfg.num_experts > 0:
+        ff = cfg.moe_d_ff or cfg.d_ff
+        per_expert = 3 * cfg.d_model * ff
+        n_moe_layers = sum(1 for _, f in cfg.layer_kinds() if f.startswith("moe"))
+        inactive = n_moe_layers * per_expert * (cfg.num_experts - cfg.experts_per_token)
+        n -= inactive
+    return n
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N_active·D for training; 2·N_active·D for a forward-only step
+    (prefill); 2·N_active·B for one decode token."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+# ---------------------------------------------------------------------------
+# Scan-trip correction.
+#
+# XLA's cost_analysis counts a while-loop (lax.scan) body ONCE regardless of
+# trip count.  Our steps nest two scans: the layer-stack scan (`reps` trips =
+# num_layers / pattern period) and, for training, the microbatch
+# gradient-accumulation scan (`mb` trips).  Raw HLO numbers therefore
+# undercount by up to mb×reps.  We decompose:
+#
+#   raw  =  f_outside  +  f_mb_body_once            (train)
+#   f_mb_body_once = f_unembed+loss  +  f_layer_body_once
+#   true =  f_outside  +  mb × (f_unembed + reps × f_layer_body)
+#
+# with f_outside (optimizer update + grad clip ≈ 40 flops/param) and
+# f_unembed (≈ 3·2·tokens_mb·d·V for train fwd+bwd, 2·tokens·d·V for serve)
+# estimated analytically, both divided by the chip count (per-device
+# program).  The same decomposition corrects bytes and collective bytes with
+# byte-level outside estimates.  Corrected values are *estimates* and are
+# recorded alongside the raw HLO numbers.
+# ---------------------------------------------------------------------------
+
+def _scan_trips(cfg, shape) -> Tuple[int, int]:
+    """(layer_scan_reps, microbatch_trips) actually used by the step."""
+    from repro.models.transformer import stack_plan
+    from .steps import default_microbatches
+    if cfg.is_encoder_decoder or not cfg.scan_layers:
+        reps = 1
+    else:
+        _, _, reps = stack_plan(cfg)
+    mb = default_microbatches(cfg, shape) if shape.kind == "train" else 1
+    return reps, mb
+
+
+def correct_terms(raw_flops: float, raw_bytes: float, raw_coll: float,
+                  cfg, shape, chips: int, params: int,
+                  microbatches: int | None = None) -> dict:
+    reps, mb_default = _scan_trips(cfg, shape)
+    mb = microbatches or mb_default
+    d, v = cfg.d_model, cfg.vocab_size
+
+    if shape.kind == "train":
+        tokens_mb = shape.global_batch * shape.seq_len / mb
+        f_unembed = 3 * 2.0 * tokens_mb * d * v / chips       # fwd + 2 bwd
+        f_outside = 40.0 * params / chips                      # adamw + clip
+        b_unembed = (2.0 * d * v + 6.0 * tokens_mb * v) / chips
+        b_outside = 14.0 * params / chips                      # p, m, v r/w
+        c_outside = 2 * 4.0 * params / chips                   # grad sync
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch          # unembed on the LAST position only
+        f_unembed = 2.0 * tokens * d * v / chips
+        f_outside = 0.0
+        b_unembed = (2.0 * d * v + 2.0 * tokens * v) / chips
+        b_outside = 0.0
+        c_outside = 0.0
+    else:  # decode
+        tokens = shape.global_batch
+        f_unembed = 2.0 * tokens * d * v / chips
+        f_outside = 0.0
+        b_unembed = (2.0 * d * v + 2.0 * tokens * v) / chips
+        b_outside = 0.0
+        c_outside = 0.0
+
+    def corr(raw, out_fixed, out_body):
+        body_layer = max(raw - out_fixed - out_body, 0.0)
+        if shape.kind == "train":
+            return out_fixed + mb * (out_body + reps * body_layer)
+        return out_fixed + out_body + reps * body_layer
+
+    return {
+        "scan_layer_reps": reps,
+        "scan_mb_trips": mb,
+        "flops_per_device_corrected": corr(raw_flops, f_outside, f_unembed),
+        "bytes_per_device_corrected": corr(raw_bytes, b_outside, b_unembed),
+        "collective_bytes_per_device_corrected": corr(raw_coll, c_outside, 0.0),
+    }
+
+
+def extract_roofline(arch: str, shape, mesh_name: str, chips: int,
+                     compiled, lowered_text: str, cfg,
+                     microbatches: int | None = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    colls = collective_bytes(lowered_text)
+    mem = compiled.memory_analysis()
+    peak = float(getattr(mem, "temp_size_in_bytes", 0) +
+                 getattr(mem, "argument_size_in_bytes", 0) +
+                 getattr(mem, "output_size_in_bytes", 0) -
+                 getattr(mem, "alias_size_in_bytes", 0))
+    from .steps import param_count
+    correction = correct_terms(flops, byts, float(sum(colls.values())),
+                               cfg, shape, chips, param_count(cfg),
+                               microbatches=microbatches)
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=float(sum(colls.values())),
+        collectives_by_kind=colls, peak_memory_per_device=peak,
+        model_flops=model_flops_estimate(cfg, shape),
+        correction=correction)

@@ -1,0 +1,185 @@
+"""Step builders for the dry-run / launcher: train_step (with microbatch
+gradient accumulation), prefill_step, serve_step (one decode token), and the
+pod-scale FL aggregation step.
+
+Each builder returns (fn, in_shardings, out_shardings, arg_specs) ready for
+``jax.jit(fn, in_shardings=...).lower(*arg_specs)`` under ``with mesh``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs.shapes import InputShape
+from repro.data.specs import input_specs
+from repro.models import (decode_step, init_model, loss_fn, model_param_specs,
+                          prefill)
+from repro.models.config import ModelConfig
+from repro.optim import OptState, adamw, apply_updates, clip_by_global_norm
+
+PyTree = Any
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda k: init_model(k, cfg)[0], jax.random.PRNGKey(0))
+    return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes))
+
+
+def opt_state_dtype(cfg: ModelConfig):
+    """bf16 moments for ≥10B params so the optimizer fits the pod (DESIGN §4)."""
+    return jnp.bfloat16 if param_count(cfg) > 10e9 else jnp.float32
+
+
+def default_microbatches(cfg: ModelConfig, shape: InputShape) -> int:
+    """Gradient-accumulation depth: bound live tokens ≈128k (vocab-logit and
+    activation memory scale with tokens/microbatch)."""
+    if shape.kind != "train":
+        return 1
+    tokens = shape.global_batch * shape.seq_len
+    n = param_count(cfg)
+    target = 131_072 if n < 5e10 else 65_536
+    mb = max(1, tokens // target)
+    while shape.global_batch % mb:
+        mb -= 1
+    return mb
+
+
+def _param_shardings(cfg: ModelConfig, mesh: Mesh, rules) -> Tuple[PyTree, PyTree]:
+    logical = model_param_specs(cfg)
+    params_abs = abstract_params(cfg)
+    named = sh.shardings_for(params_abs, logical, mesh, rules)
+    pspecs = jax.tree_util.tree_map(lambda n: n.spec, named)
+    return named, pspecs
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    return jax.eval_shape(lambda k: init_model(k, cfg)[0], jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: ModelConfig, params: PyTree) -> OptState:
+    dt = opt_state_dtype(cfg)
+    moments = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dt), params)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    mu=moments, nu=moments)
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                    microbatches: int | None = None, fsdp: bool | None = None,
+                    tp: bool = True, seq_parallel: bool = False):
+    fsdp = cfg.fsdp if fsdp is None else fsdp
+    rules = sh.make_rules(mesh, "train", fsdp, tp=tp, seq_parallel=seq_parallel)
+    mb = microbatches or default_microbatches(cfg, shape)
+    opt = adamw(3e-4, state_dtype=opt_state_dtype(cfg))
+
+    batch_specs, batch_logical = input_specs(cfg, shape)
+    batch_shardings = sh.shardings_for(batch_specs, batch_logical, mesh, rules)
+    param_shardings, _ = _param_shardings(cfg, mesh, rules)
+    opt_shardings = OptState(step=NamedSharding(mesh, P()),
+                             mu=param_shardings, nu=param_shardings)
+
+    def train_step(params, opt_state, batch):
+        def mb_loss(p, mbatch):
+            return loss_fn(p, cfg, mbatch)[0]
+
+        if mb > 1:
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+            mbatches = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(acc, mbatch):
+                l, g = jax.value_and_grad(mb_loss)(params, mbatch)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return acc, l
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(acc_fn, zeros, mbatches)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(mb_loss)(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        ups, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, ups)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    params_abs = abstract_params(cfg)
+    opt_abs = abstract_opt_state(cfg, params_abs)
+    args = (params_abs, opt_abs, batch_specs)
+    in_shardings = (param_shardings, opt_shardings, batch_shardings)
+    out_shardings = (param_shardings, opt_shardings,
+                     {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P())})
+    return train_step, in_shardings, out_shardings, args, rules
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape):
+    rules = sh.make_rules(mesh, "prefill", cfg.fsdp)
+    batch_specs, batch_logical = input_specs(cfg, shape)
+    batch_shardings = sh.shardings_for(batch_specs, batch_logical, mesh, rules)
+    param_shardings, _ = _param_shardings(cfg, mesh, rules)
+
+    def prefill_step(params, batch):
+        logits, caches = prefill(params, cfg, batch, max_len=shape.seq_len)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    params_abs = abstract_params(cfg)
+    args = (params_abs, batch_specs)
+    in_shardings = (param_shardings, batch_shardings)
+    # Pin the produced cache to the decode-resident sharding (seq over
+    # `model`) so prefill→decode handoff needs no reshard and the cache is
+    # never replicated across the model axis.
+    from repro.data.specs import decode_specs
+    from repro.configs.shapes import InputShape as _IS
+    dec_specs, dec_logical = decode_specs(
+        cfg, _IS(shape.name, shape.seq_len, shape.global_batch, "decode"))
+    cache_sh = sh.shardings_for(dec_specs["caches"], dec_logical["caches"],
+                                mesh, rules)
+    tok_sh = sh.shardings_for(
+        jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+        (sh.BATCH,), mesh, rules)
+    out_shardings = (tok_sh, cache_sh)
+    return prefill_step, in_shardings, out_shardings, args, rules
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                    kv_policy: str = "seq"):
+    """ONE new token against a cache of shape.seq_len (decode_32k/long_500k)."""
+    rules = sh.make_rules(mesh, "decode", cfg.fsdp, kv_policy=kv_policy)
+    specs, logical = input_specs(cfg, shape)
+    shardings = sh.shardings_for(specs, logical, mesh, rules)
+    param_shardings, _ = _param_shardings(cfg, mesh, rules)
+
+    def serve_step(params, tokens, caches):
+        logits, new_caches = decode_step(params, cfg, tokens, caches)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_caches
+
+    params_abs = abstract_params(cfg)
+    args = (params_abs, specs["tokens"], specs["caches"])
+    in_shardings = (param_shardings, shardings["tokens"], shardings["caches"])
+    out_shardings = (shardings["tokens"], shardings["caches"])
+    return serve_step, in_shardings, out_shardings, args, rules
+
+
+def arch_shape_applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic attention: SSM/hybrid run natively; pure
+    full-attention archs run the sliding-window variant (DESIGN.md §5)."""
+    if shape.name == "long_500k" and cfg.arch_type not in ("ssm", "hybrid"):
+        return True, "sliding_window=4096 variant (sub-quadratic carve-in)"
+    return True, ""
+
+
+def config_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    if shape.name == "long_500k" and cfg.arch_type not in ("ssm", "hybrid"):
+        return dataclasses.replace(cfg, sliding_window=4096)
+    return cfg

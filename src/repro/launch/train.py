@@ -1,0 +1,104 @@
+"""Training launcher: runs the distributed train_step for an --arch config on
+the locally visible mesh (CPU smoke → reduced config; TPU pod → full config).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --reduced \
+        --steps 20 --batch 8 --seq 128
+
+Also the end-to-end FL-LM pretraining driver (--fl): federated label-wise
+clustering over domain-skewed token streams (DESIGN.md §5's LM mapping).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as sh
+from repro.ckpt import save_checkpoint
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import InputShape
+from repro.data import TokenDataset
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.steps import make_train_step
+from repro.models import init_model, loss_fn
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+
+
+def synth_lm_batch(ds: TokenDataset, key, batch: int, domains=None):
+    if domains is None:
+        domains = jax.random.randint(key, (batch,), 0, ds.num_domains)
+    toks = ds.sample(key, domains)
+    return {"tokens": toks,
+            "targets": jnp.roll(toks, -1, axis=1).at[:, -1].set(-1)}
+
+
+def run_train(arch: str, steps: int, batch: int, seq: int, reduced: bool,
+              ckpt_dir: str | None = None, log_every: int = 10) -> list:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced(vocab_size=512)
+    mesh = make_debug_mesh()
+    shape = InputShape("custom", seq, batch, "train")
+    step_fn, in_sh, out_sh, _, rules = make_train_step(cfg, mesh, shape,
+                                                       microbatches=1)
+    ds = TokenDataset(vocab_size=cfg.vocab_size, seq_len=seq)
+    key = jax.random.PRNGKey(0)
+    params, _ = init_model(key, cfg)
+    opt = adamw(3e-4)
+    # The launcher reuses make_train_step's optimizer contract: state built
+    # here must match the abstract spec (f32 moments for reduced configs).
+    from repro.optim import OptState
+    opt_state = OptState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree_util.tree_map(
+                             lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                         nu=jax.tree_util.tree_map(
+                             lambda p: jnp.zeros(p.shape, jnp.float32), params))
+    with mesh:
+        with sh.shard_ctx(mesh, rules):
+            jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh)
+        losses = []
+        t0 = time.time()
+        for i in range(steps):
+            kb = jax.random.fold_in(key, i)
+            extra = {}
+            if cfg.arch_type == "vlm":
+                extra["patch_embeds"] = jax.random.normal(
+                    kb, (batch, cfg.num_patch_tokens, cfg.vision_embed_dim))
+            if cfg.is_encoder_decoder:
+                extra["frames"] = jax.random.normal(
+                    kb, (batch, cfg.num_frames, cfg.d_model))
+            b = {**synth_lm_batch(ds, kb, batch), **extra}
+            params, opt_state, m = jitted(params, opt_state, b)
+            losses.append(float(m["loss"]))
+            if i % log_every == 0:
+                print(f"step {i:4d} loss {losses[-1]:.4f} "
+                      f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, params, {"arch": arch, "loss": losses[-1]})
+    return losses
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-14b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full-config", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+    losses = run_train(args.arch, args.steps, args.batch, args.seq,
+                       args.reduced, args.ckpt_dir)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    import numpy as _np
+    return 0 if _np.isfinite(losses).all() else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

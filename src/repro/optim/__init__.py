@@ -1,0 +1,7 @@
+from .optimizers import (OptState, sgd, momentum, adam, adamw, get_optimizer,
+                         apply_updates, global_norm, clip_by_global_norm)
+from .schedules import constant, cosine, warmup_cosine, get_schedule
+
+__all__ = ["OptState", "sgd", "momentum", "adam", "adamw", "get_optimizer",
+           "apply_updates", "global_norm", "clip_by_global_norm",
+           "constant", "cosine", "warmup_cosine", "get_schedule"]

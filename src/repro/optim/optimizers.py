@@ -1,0 +1,153 @@
+"""Pure-pytree optimizers (no external deps): sgd / momentum / adam / adamw.
+
+Interface mirrors optax minimally:
+    opt = adam(lr=1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+``state_dtype`` makes first/second-moment dtype configurable — the giant
+dry-run configs use bf16 moments so a 340B model's optimizer fits the pod
+(DESIGN.md §4); the paper-scale FL experiments use f32 (Adam, as in §III-B).
+Optimizer state inherits each param's sharding automatically (same tree
+structure ⇒ same NamedSharding under pjit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], Tuple[PyTree, PyTree]]
+
+
+class OptState(NamedTuple):
+    step: Array
+    mu: Optional[PyTree] = None
+    nu: Optional[PyTree] = None
+
+
+def _as_schedule(lr) -> Callable[[Array], Array]:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def _zeros_like(tree: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), tree)
+
+
+def sgd(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        eta = sched(state.step)
+        ups = jax.tree_util.tree_map(lambda g: -eta * g.astype(jnp.float32), grads)
+        return ups, OptState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, state_dtype=jnp.float32) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=_zeros_like(params, state_dtype))
+
+    def update(grads, state, params=None):
+        eta = sched(state.step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: (beta * m.astype(jnp.float32)
+                          + g.astype(jnp.float32)).astype(m.dtype), state.mu, grads)
+        ups = jax.tree_util.tree_map(lambda m: -eta * m.astype(jnp.float32), mu)
+        return ups, OptState(step=state.step + 1, mu=mu)
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay, state_dtype) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=_zeros_like(params, state_dtype),
+                        nu=_zeros_like(params, state_dtype))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        eta = sched(state.step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        gflat, treedef = jax.tree_util.tree_flatten(grads)
+        mflat = treedef.flatten_up_to(state.mu)
+        vflat = treedef.flatten_up_to(state.nu)
+        pflat = treedef.flatten_up_to(params) if params is not None else [None] * len(gflat)
+
+        mu_out, nu_out, up_out = [], [], []
+        for m, v, g, p in zip(mflat, vflat, gflat, pflat):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            u = -eta * (mf / bc1) / (jnp.sqrt(vf / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - eta * weight_decay * p.astype(jnp.float32)
+            mu_out.append(mf.astype(m.dtype))
+            nu_out.append(vf.astype(v.dtype))
+            up_out.append(u)
+        mu = jax.tree_util.tree_unflatten(treedef, mu_out)
+        nu = jax.tree_util.tree_unflatten(treedef, nu_out)
+        ups = jax.tree_util.tree_unflatten(treedef, up_out)
+        return ups, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8, state_dtype=jnp.float32) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, 0.0, state_dtype)
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          state_dtype=jnp.float32) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay, state_dtype)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def get_optimizer(name: str, lr, state_dtype=jnp.float32) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr, state_dtype=state_dtype)
+    if name == "adam":
+        return adam(lr, state_dtype=state_dtype)
+    if name == "adamw":
+        return adamw(lr, state_dtype=state_dtype)
+    raise KeyError(f"unknown optimizer {name!r}")

@@ -1,0 +1,37 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * c)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup_steps, 1)
+        return jnp.where(s < warmup_steps, warm, cos(step - warmup_steps))
+    return f
+
+
+def get_schedule(name: str, lr: float, **kw):
+    if name == "constant":
+        return constant(lr)
+    if name == "cosine":
+        return cosine(lr, **kw)
+    if name == "warmup_cosine":
+        return warmup_cosine(lr, **kw)
+    raise KeyError(f"unknown schedule {name!r}")

@@ -1,0 +1,189 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style, minimal).
+
+Params and activations are annotated with *logical* axis names; a rule table
+maps those to mesh axes for the active mesh.  One table serves both meshes:
+rules referencing a mesh axis the mesh doesn't have (e.g. ``pod`` on the
+single-pod mesh) silently drop that axis.
+
+Train-mode rules implement Megatron-TP (heads/ff/vocab/experts over ``model``)
++ ZeRO-style FSDP (weight rows over ``data``) + DP batch over
+(``pod``, ``data``).  Decode-mode rules additionally shard the KV-cache
+*sequence* dimension over ``model`` (flash-decoding style): at one-token-per-
+step there is no seq parallelism to exploit in activations, but the cache is
+the dominant memory term and must be spread (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# Logical axis vocabulary.
+BATCH = "batch"            # global batch / clients
+SEQ = "seq"                # sequence (activations)
+KV_SEQ = "kv_seq"          # KV-cache sequence (decode)
+EMBED = "embed"            # d_model rows of weight matrices (FSDP candidate)
+VOCAB = "vocab"
+HEADS = "heads"
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"
+FF = "ff"
+EXPERTS = "experts"
+MOE_FF = "moe_ff"          # per-expert hidden dim (experts already take `model`)
+SSM_INNER = "ssm_inner"    # mamba d_inner columns
+SSM_STATE = "ssm_state"
+RESIDUAL_SEQ = "residual_seq"  # seq dim of the saved residual stream (SP)
+CLIENTS = "clients"        # FL client axis (pod-scale rounds)
+
+
+def make_rules(mesh: Mesh, mode: str = "train", fsdp: bool = True,
+               kv_policy: str = "seq", tp: bool = True,
+               seq_parallel: bool = False) -> Dict[str, Any]:
+    """Rule table for ``mesh``.  mode ∈ {train, prefill, decode}.
+
+    ``kv_policy`` (decode only) picks which KV-cache axis takes ``model``:
+    'seq' (flash-decoding style sequence sharding — default, works for any
+    kv_heads count) or 'heads' (classic TP head sharding — only useful when
+    kv_heads divides the model axis; a §Perf lever)."""
+    names = set(mesh.axis_names)
+    has_pod = "pod" in names
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    if not tp:
+        # Small-model regime (§Perf): the `model` axis joins data parallelism
+        # instead of tensor-sharding sub-16×-too-small weight matrices.
+        batch_axes = batch_axes + ("model",)
+    # prefill builds the decode-resident cache, so both serving modes shard
+    # the cache the same way (handoff consistency + memory).
+    caching = mode in ("decode", "prefill")
+    rules: Dict[str, Any] = {
+        BATCH: batch_axes,
+        SEQ: None,
+        KV_SEQ: ("model" if (caching and kv_policy == "seq" and tp) else None),
+        EMBED: "data" if fsdp else None,
+        VOCAB: "model" if tp else None,
+        HEADS: "model" if tp else None,
+        # The cache spec may name `model` only once: sequence XOR heads.
+        KV_HEADS: (("model" if kv_policy == "heads" else None) if caching
+                   else "model") if tp else None,
+        HEAD_DIM: None,
+        FF: "model" if tp else None,
+        EXPERTS: "model" if tp else None,
+        MOE_FF: None,
+        SSM_INNER: "model" if tp else None,
+        SSM_STATE: None,
+        # Megatron-style sequence parallelism for the *saved* residual stream
+        # between layers (§Perf hillclimb C): shards the scan carries the
+        # backward pass keeps, at the cost of per-layer seq all-gathers.
+        RESIDUAL_SEQ: "model" if (seq_parallel and tp) else None,
+        CLIENTS: "pod" if has_pod else "data",
+    }
+    return rules
+
+
+def logical_to_spec(axes: Sequence[str | None], rules: Mapping[str, Any]) -> P:
+    """Translate a tuple of logical axis names into a PartitionSpec."""
+    parts = []
+    for ax in axes:
+        if ax is None:
+            parts.append(None)
+        else:
+            parts.append(rules.get(ax, None))
+    # Trim trailing Nones (cosmetic; P() semantics identical).
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def spec_for_shape(shape: Sequence[int], axes: Sequence[str | None],
+                   mesh: Mesh, rules: Mapping[str, Any]) -> P:
+    """Like logical_to_spec but drops any mesh axis that does not evenly
+    divide the corresponding dimension (GSPMD in_shardings require exact
+    divisibility; replication is the safe fallback — e.g. 8 KV heads on a
+    16-way model axis, or batch=1 decode on the data axis)."""
+    parts = []
+    for dim, ax in zip(shape, axes):
+        entry = rules.get(ax, None) if ax is not None else None
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        parts.append(entry)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shardings_for(abstract: PyTree, logical: PyTree, mesh: Mesh,
+                  rules: Mapping[str, Any]) -> PyTree:
+    """Shape-aware NamedShardings for ``abstract`` (ShapeDtypeStruct tree)
+    annotated by the matching ``logical`` axes tree."""
+    def one(leaf, axes):
+        if axes is None:
+            axes = ()
+        assert is_axes_tuple(axes), f"bad axes leaf {axes!r}"
+        axes = (tuple(axes) + (None,) * len(leaf.shape))[:len(leaf.shape)]
+        return NamedSharding(mesh, spec_for_shape(leaf.shape, axes, mesh, rules))
+
+    flat, treedef = jax.tree_util.tree_flatten(abstract)
+    axes_flat = treedef.flatten_up_to(logical)
+    return treedef.unflatten([one(l, a) for l, a in zip(flat, axes_flat)])
+
+
+def is_axes_tuple(x) -> bool:
+    """True for a logical-axes leaf: a (possibly empty) tuple of names/None."""
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+def tree_to_shardings(logical_tree: PyTree, mesh: Mesh,
+                      rules: Mapping[str, Any]) -> PyTree:
+    """Map a pytree of logical-axis tuples to NamedShardings on ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda axes: NamedSharding(mesh, logical_to_spec(axes, rules)),
+        logical_tree, is_leaf=is_axes_tuple)
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context: model code calls ``constrain(x, *axes)`` with
+# logical names; outside a shard context (unit tests, vmap simulator) it is a
+# no-op, inside (dryrun/train lowering) it pins intermediate shardings.
+# ---------------------------------------------------------------------------
+import contextlib as _contextlib
+
+_ACTIVE: list = []
+
+
+@_contextlib.contextmanager
+def shard_ctx(mesh: Mesh, rules: Mapping[str, Any]):
+    _ACTIVE.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def constrain(x, *logical_axes):
+    if not _ACTIVE:
+        return x
+    mesh, rules = _ACTIVE[-1]
+    spec = logical_to_spec(logical_axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_to_specs(logical_tree: PyTree, rules: Mapping[str, Any]) -> PyTree:
+    """Same, but raw PartitionSpecs (for in_shardings=... with jit)."""
+    return jax.tree_util.tree_map(
+        lambda axes: logical_to_spec(axes, rules),
+        logical_tree, is_leaf=is_axes_tuple)

@@ -1,0 +1,177 @@
+"""Unit + property tests for repro.core.label_stats / kl / clustering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (histogram, label_variance, label_variance_normed,
+                        coverage, rank_remap_values, kl_to_uniform,
+                        uniformity_score, area_index, num_areas_upper_bound,
+                        selection_priority, greedy_area_selection,
+                        cluster_sizes, expected_coverage_per_round)
+
+C = 10
+
+
+def hist_of(labels):
+    return histogram(jnp.asarray(labels), C)
+
+
+class TestHistogram:
+    def test_basic(self):
+        h = hist_of([0, 0, 1, 9])
+        np.testing.assert_allclose(np.asarray(h), [2, 1, 0, 0, 0, 0, 0, 0, 0, 1])
+
+    def test_valid_mask(self):
+        labels = jnp.array([3, 3, 0, 0])
+        valid = jnp.array([1, 1, 0, 0])
+        h = histogram(labels, C, valid)
+        assert h[3] == 2 and h[0] == 0
+
+    def test_batched(self):
+        labels = jnp.array([[0, 1], [2, 2]])
+        h = histogram(labels, C)
+        assert h.shape == (2, C)
+        assert h[1, 2] == 2
+
+
+class TestVariance:
+    def test_single_label_zero(self):
+        assert float(label_variance(hist_of([4] * 50))) == 0.0
+
+    def test_rank_invariance(self):
+        """Paper §III-A: {1,5,10}-style multisets ≡ {0,1,2} under remap."""
+        a = label_variance(hist_of([1, 5, 9]))
+        b = label_variance(hist_of([0, 1, 2]))
+        np.testing.assert_allclose(float(a), float(b), rtol=1e-6)
+
+    def test_uniform_beats_skewed(self):
+        uni = label_variance(hist_of(list(range(10)) * 29))
+        skew = label_variance(hist_of([0] * 200 + [1] * 90))
+        assert float(uni) > float(skew)
+
+    def test_uniform_value(self):
+        # ranks 0..9 each once: var = (99)/12... population var of 0..9 = 8.25
+        v = label_variance(hist_of(list(range(10))))
+        np.testing.assert_allclose(float(v), 8.25, rtol=1e-6)
+
+    def test_normed(self):
+        h = hist_of(list(range(10)))
+        np.testing.assert_allclose(float(label_variance_normed(h)),
+                                   8.25 / 10, rtol=1e-6)
+
+    def test_rank_remap_values(self):
+        h = hist_of([1, 5, 9, 9])
+        r = rank_remap_values(h)
+        assert float(r[1]) == 0 and float(r[5]) == 1 and float(r[9]) == 2
+
+
+class TestKL:
+    def test_uniform_is_zero_forward(self):
+        h = hist_of(list(range(10)))
+        np.testing.assert_allclose(float(kl_to_uniform(h, "forward")), 0.0, atol=1e-6)
+
+    def test_skew_positive(self):
+        assert float(kl_to_uniform(hist_of([0] * 100), "forward")) > 1.0
+
+    def test_reverse_penalizes_missing_class_heavily(self):
+        full = kl_to_uniform(hist_of(list(range(10))), "reverse")
+        missing = kl_to_uniform(hist_of(list(range(9)) * 10), "reverse")
+        assert float(missing) > float(full) + 1.0
+
+    def test_ordering_matches_paper_fig5(self):
+        """U(0,9) client must outscore gaussian-ish, mixture, gamma-ish ones."""
+        rng = np.random.default_rng(0)
+        uniform = rng.integers(0, 10, 1000)
+        normal = np.clip(np.round(rng.normal(5, 1, 1000)), 0, 9).astype(int)
+        mixture = np.concatenate([
+            np.clip(np.round(rng.normal(2, 1, 500)), 0, 9),
+            np.clip(np.round(rng.normal(6, 1, 500)), 0, 9)]).astype(int)
+        gamma = np.clip(np.round(rng.gamma(5, 1, 1000)), 0, 9).astype(int)
+        scores = {k: float(uniformity_score(hist_of(v)))
+                  for k, v in dict(u=uniform, n=normal, m=mixture, g=gamma).items()}
+        assert scores["u"] == max(scores.values())
+        # mixture is closer to uniform than the single normal (paper: KL 602 < 2093)
+        assert scores["m"] > scores["n"]
+
+
+class TestClustering:
+    def test_cluster_sizes(self):
+        hists = jnp.stack([hist_of([0, 1]), hist_of([1, 2]), hist_of([1])])
+        sizes = cluster_sizes(hists)
+        assert sizes[1] == 3 and sizes[0] == 1 and sizes[2] == 1
+
+    def test_area_index_fig3(self):
+        """Fig. 3: with q=3 labels in play, full-coverage client → A_1,
+        two-label → A_2, single-label → A_3."""
+        hists = jnp.stack([hist_of([0, 1, 2]), hist_of([0, 1]), hist_of([2])])
+        p = area_index(hists)
+        np.testing.assert_array_equal(np.asarray(p), [1, 2, 3])
+
+    def test_upper_bound_formula(self):
+        for tau, want in [(1, 1), (2, 3), (3, 7), (4, 13)]:
+            assert int(num_areas_upper_bound(tau)) == want
+
+    def test_priority_orders_by_coverage_then_variance(self):
+        full = hist_of(list(range(10)))
+        nine = hist_of(list(range(9)))
+        nine_skew = hist_of([0] * 92 + list(range(1, 9)))
+        s = selection_priority(jnp.stack([nine_skew, full, nine]))
+        assert float(s[1]) > float(s[2]) > float(s[0])
+
+    def test_greedy_selection(self):
+        hists = jnp.stack([hist_of([0]), hist_of(list(range(10))), hist_of([0, 1])])
+        idx = greedy_area_selection(hists, 2)
+        assert int(idx[0]) == 1 and int(idx[1]) == 2
+
+    def test_union_coverage(self):
+        hists = jnp.stack([hist_of([0]), hist_of([3]), hist_of([3, 7])])
+        assert int(expected_coverage_per_round(hists)) == 3
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(0, C - 1), min_size=1, max_size=64))
+    def test_variance_nonneg_and_rank_bounded(labels):
+        h = hist_of(labels)
+        v = float(label_variance(h))
+        u = len(set(labels))
+        assert v >= 0.0
+        # variance of ranks 0..u-1 is at most ((u-1)/2)^2
+        assert v <= ((u - 1) / 2) ** 2 + 1e-5
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(0, C - 1), min_size=1, max_size=64))
+    def test_kl_forward_bounds(labels):
+        h = hist_of(labels)
+        kl = float(kl_to_uniform(h, "forward"))
+        assert -1e-5 <= kl <= np.log(C) + 1e-4
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.lists(st.integers(0, C - 1), min_size=1, max_size=20),
+                    min_size=1, max_size=12))
+    def test_area_count_respects_eq4_bound(clients):
+        hists = jnp.stack([hist_of(c) for c in clients])
+        tau = int(max(len(set(c)) for c in clients))
+        distinct_areas = len(set(np.asarray(area_index(hists)).tolist()))
+        assert distinct_areas <= int(num_areas_upper_bound(tau))
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(0, C - 1), min_size=4, max_size=4, unique=True))
+    def test_variance_monotone_relabel_invariant(ids):
+        """Paper §III-A: {1,5,10} ≡ {0,1,2} — σ² is invariant under any
+        order-preserving relabeling of the class ids (NOT arbitrary permutation:
+        the rank remap preserves count→rank assignment by class order)."""
+        ids = sorted(ids)
+        counts = [2, 1, 3, 1]
+        labels = [c for c, k in zip(ids, counts) for _ in range(k)]
+        canon = [c for c, k in zip(range(4), counts) for _ in range(k)]
+        a = float(label_variance(hist_of(labels)))
+        b = float(label_variance(hist_of(canon)))
+        np.testing.assert_allclose(a, b, rtol=1e-5)

@@ -1,0 +1,153 @@
+"""Tests for the data pipeline, input specs, and sharding-rule machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core import bias_mix_plan
+from repro.data import (ImageDataset, TokenDataset, client_batches,
+                        input_specs, materialize_round, text_len)
+
+
+class TestImageDataset:
+    def test_class_conditional_structure(self):
+        ds = ImageDataset()
+        key = jax.random.PRNGKey(0)
+        same = ds.sample(key, jnp.array([3, 3]))
+        diff = ds.sample(key, jnp.array([3, 7]))
+        # same class → differ only by noise; different class → template gap
+        d_same = float(jnp.abs(same[0] - same[1]).mean())
+        d_diff = float(jnp.abs(diff[0] - diff[1]).mean())
+        assert d_diff > d_same + 0.3
+
+    def test_padding_label_zeroed(self):
+        ds = ImageDataset()
+        img = ds.sample(jax.random.PRNGKey(0), jnp.array([-1]))
+        assert float(jnp.abs(img).sum()) == 0.0
+
+    def test_test_set(self):
+        ds = ImageDataset()
+        x, y = ds.test_set(n_per_class=3)
+        assert x.shape == (30, 28, 28, 1) and y.shape == (30,)
+
+
+class TestTokenDataset:
+    def test_domain_bands(self):
+        ds = TokenDataset(num_domains=4, vocab_size=64, seq_len=256)
+        toks = ds.sample(jax.random.PRNGKey(0), jnp.array([0, 3]))
+        band = 64 // 4
+        frac0 = float((toks[0] < band).mean())
+        frac3 = float((toks[1] >= 3 * band).mean())
+        assert frac0 > 0.6 and frac3 > 0.6  # concentration = 0.85
+
+
+class TestRoundMaterialization:
+    def test_hists_match_labels(self):
+        ds = ImageDataset()
+        plan = bias_mix_plan(0, 8, 0.5, n_max=32, n_min=8)
+        data = materialize_round(ds, plan[0], jax.random.PRNGKey(0))
+        n_valid = (plan[0] >= 0).sum()
+        assert float(data["hists"].sum()) == n_valid
+
+    def test_client_batches_shapes(self):
+        ds = ImageDataset()
+        plan = bias_mix_plan(0, 4, 0.5, n_max=33, n_min=8)
+        data = materialize_round(ds, plan[0], jax.random.PRNGKey(0))
+        b = client_batches(data, batch_size=16)
+        assert b["images"].shape[:3] == (4, 3, 16)   # ceil(33/16) = 3 batches
+        # padding rows are invalid
+        total_valid = float(b["valid"].sum())
+        assert total_valid == float(data["valid"].sum())
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    @pytest.mark.parametrize("shape_name", list(SHAPES))
+    def test_specs_structure(self, arch, shape_name):
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        specs, logical = input_specs(cfg, shape)
+        # logical tree must cover the spec tree exactly (flatten_up_to works)
+        flat, treedef = jax.tree_util.tree_flatten(specs)
+        axes = treedef.flatten_up_to(logical)
+        assert len(flat) == len(axes)
+        if shape.kind != "decode":
+            b, s = specs["tokens"].shape
+            assert b == shape.global_batch
+            assert s == text_len(cfg, shape.seq_len)
+        else:
+            assert specs["tokens"].shape == (shape.global_batch,)
+
+    def test_vlm_patch_budget(self):
+        cfg = get_config("phi-3-vision-4.2b")
+        shape = SHAPES["train_4k"]
+        specs, _ = input_specs(cfg, shape)
+        total = specs["tokens"].shape[1] + cfg.num_patch_tokens
+        assert total == shape.seq_len
+
+
+class TestShardingRules:
+    def setup_method(self):
+        self.mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_divisibility_fallback(self):
+        mesh = self.mesh
+        rules = sh.make_rules(mesh, "train")
+        # 7 not divisible by anything >1 is moot on 1×1, so fake a big mesh
+        # via rule math: _axis_size of ('data','model') on 1×1 is 1 → kept.
+        spec = sh.spec_for_shape((8, 7), (sh.BATCH, sh.HEADS), mesh, rules)
+        assert spec == P(("data",), "model")
+
+    def test_decode_rules_no_duplicate_model(self):
+        rules = sh.make_rules(self.mesh, "decode")
+        assert rules[sh.KV_HEADS] is None and rules[sh.KV_SEQ] == "model"
+
+    def test_multipod_batch_axes(self):
+        mesh3 = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+        rules = sh.make_rules(mesh3, "train")
+        assert rules[sh.BATCH] == ("pod", "data")
+        assert rules[sh.CLIENTS] == "pod"
+
+    def test_constrain_noop_outside_ctx(self):
+        x = jnp.ones((4,))
+        assert sh.constrain(x, sh.BATCH) is x
+
+    def test_shardings_for_param_tree(self):
+        cfg = get_config("granite-moe-1b-a400m").reduced()
+        from repro.launch.steps import _param_shardings
+        rules = sh.make_rules(self.mesh, "train", fsdp=False)
+        named, specs = _param_shardings(cfg, self.mesh, rules)
+        leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert all(isinstance(l, P) for l in leaves)
+
+
+class TestRooflineParser:
+    def test_collective_bytes_regex(self):
+        from repro.launch.roofline import collective_bytes
+        hlo = """
+  %ag = bf16[16,512]{1,0} all-gather(bf16[1,512]{1,0} %x), dimensions={0}
+  %ar.1 = f32[1024]{0} all-reduce(f32[1024]{0} %y), to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(f32[1024]{0} %z), dimensions={0}
+  %a2a = (f32[8,32]{1,0}, f32[8,32]{1,0}) all-to-all(f32[8,32]{1,0} %u, f32[8,32]{1,0} %v)
+  %cp = u16[128]{0} collective-permute(u16[128]{0} %w), source_target_pairs={{0,1}}
+"""
+        got = collective_bytes(hlo)
+        assert got["all-gather"] == 16 * 512 * 2
+        assert got["all-reduce"] == 2 * 1024 * 4      # ×2 reduce+broadcast
+        assert got["reduce-scatter"] == 64 * 4
+        assert got["all-to-all"] == 2 * 8 * 32 * 4
+        assert got["collective-permute"] == 128 * 2
+
+    def test_model_flops_estimate(self):
+        from repro.launch.roofline import model_flops_estimate, active_param_count
+        cfg = get_config("granite-moe-1b-a400m")
+        n_act = active_param_count(cfg)
+        from repro.launch.steps import param_count
+        assert n_act < param_count(cfg)   # MoE: active < total
+        shape = SHAPES["train_4k"]
+        assert model_flops_estimate(cfg, shape) == pytest.approx(
+            6.0 * n_act * 4096 * 256)

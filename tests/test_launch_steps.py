@@ -1,0 +1,97 @@
+"""Launch-layer tests: step builders lower+compile on a 1×1 debug mesh with
+reduced configs (the 512-device production dry-run runs via
+repro.launch.dryrun as its own process — these tests prove the plumbing)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sharding as sh
+from repro.configs import get_config
+from repro.configs.shapes import InputShape
+from repro.launch.steps import (default_microbatches, make_prefill_step,
+                                make_serve_step, make_train_step, param_count,
+                                opt_state_dtype, config_for_shape)
+
+MESH = jax.make_mesh((1, 1), ("data", "model"))
+TINY_TRAIN = InputShape("tiny_train", 32, 4, "train")
+TINY_PREFILL = InputShape("tiny_prefill", 32, 2, "prefill")
+TINY_DECODE = InputShape("tiny_decode", 64, 4, "decode")
+
+
+def lower_ok(cfg, shape, builder):
+    fn, in_sh, out_sh, args, rules = builder(cfg, MESH, shape)
+    with MESH:
+        with sh.shard_ctx(MESH, rules):
+            jitted = (jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+                      if out_sh is not None else jax.jit(fn, in_shardings=in_sh))
+            lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    assert float(cost.get("flops", 0)) > 0
+    return compiled
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "granite-moe-1b-a400m",
+                                  "mamba2-1.3b", "jamba-v0.1-52b",
+                                  "whisper-tiny", "phi-3-vision-4.2b"])
+def test_train_step_lowers_reduced(arch):
+    cfg = get_config(arch).reduced()
+    lower_ok(cfg, TINY_TRAIN, lambda c, m, s: make_train_step(c, m, s, 2))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "mamba2-1.3b", "whisper-tiny"])
+def test_prefill_and_serve_lower_reduced(arch):
+    cfg = get_config(arch).reduced()
+    lower_ok(cfg, TINY_PREFILL, make_prefill_step)
+    lower_ok(cfg, TINY_DECODE, make_serve_step)
+
+
+def test_serve_with_sliding_window_lowers():
+    cfg = dataclasses.replace(get_config("qwen2-72b").reduced(),
+                              sliding_window=32)
+    lower_ok(cfg, TINY_DECODE, make_serve_step)
+
+
+def test_param_counts_plausible():
+    """Headline parameter counts land near the names on the tin."""
+    expect = {
+        "nemotron-4-340b": (300e9, 380e9),
+        "qwen2-72b": (65e9, 80e9),
+        "qwen3-14b": (12e9, 17e9),
+        "mamba2-1.3b": (1.0e9, 1.6e9),
+        "minitron-4b": (3e9, 5.5e9),
+        "arctic-480b": (420e9, 520e9),
+        "jamba-v0.1-52b": (45e9, 60e9),
+        "granite-moe-1b-a400m": (0.9e9, 1.6e9),
+        "phi-3-vision-4.2b": (3.5e9, 4.8e9),
+        "whisper-tiny": (2e7, 8e7),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = param_count(get_config(arch))
+        assert lo <= n <= hi, (arch, f"{n:.3e}")
+
+
+def test_opt_state_dtype_policy():
+    assert opt_state_dtype(get_config("nemotron-4-340b")) == jnp.bfloat16
+    assert opt_state_dtype(get_config("mamba2-1.3b")) == jnp.float32
+
+
+def test_default_microbatches_divides_batch():
+    from repro.configs import SHAPES
+    for arch in ("nemotron-4-340b", "whisper-tiny"):
+        cfg = get_config(arch)
+        mb = default_microbatches(cfg, SHAPES["train_4k"])
+        assert SHAPES["train_4k"].global_batch % mb == 0 and mb >= 1
+
+
+def test_long500k_window_carvein():
+    from repro.configs import SHAPES
+    dense = config_for_shape(get_config("qwen3-14b"), SHAPES["long_500k"])
+    assert dense.sliding_window == 4096
+    ssm = config_for_shape(get_config("mamba2-1.3b"), SHAPES["long_500k"])
+    assert ssm.sliding_window == 0   # natively sub-quadratic
