@@ -2,15 +2,16 @@
 the standard FL non-IID benchmark the paper omits — plus the paper's own
 normalization ablation (σ²/n vs raw σ², DESIGN.md §8) and the entropy
 alternative.  Validates that the paper's technique generalizes off its
-hand-crafted six cases."""
-from __future__ import annotations
+hand-crafted six cases.
 
-import time
+The α axis is the compiled grid's case axis; all five strategies ride the
+lax.switch strategy axis — the full α × strategy × trial block is one jit."""
+from __future__ import annotations
 
 import numpy as np
 
 from repro.core import dirichlet_plan
-from repro.fl import run_fl
+from repro.fl import run_grid
 from .common import emit, fl_cfg, trials
 
 STRATS = ("random", "labelwise", "labelwise_unnorm", "entropy", "kl")
@@ -20,19 +21,21 @@ def main(fast: bool = True) -> dict:
     cfg = fl_cfg(fast)
     alphas = (0.1, 0.5) if fast else (0.05, 0.1, 0.5, 1.0, 5.0)
     spc = 48 if fast else 290
+    n_trials = trials(fast)
+    plans = np.stack([
+        np.stack([dirichlet_plan(300 + trial, cfg.num_clients, alpha,
+                                 samples_per_client=spc)
+                  for trial in range(n_trials)])
+        for alpha in alphas])                                # (A, R, 1, N, n)
+    res = run_grid(plans, cfg, strategies=STRATS, seeds=range(n_trials))
+    us_per_round = (res.wall_s + res.compile_s) / (
+        len(alphas) * len(STRATS) * n_trials * cfg.global_epochs) * 1e6
+
     rows = {}
-    for alpha in alphas:
-        for strat in STRATS:
-            accs = []
-            for trial in range(trials(fast)):
-                plan = dirichlet_plan(300 + trial, cfg.num_clients, alpha,
-                                      samples_per_client=spc)
-                t0 = time.perf_counter()
-                h = run_fl(plan, cfg, strategy=strat, seed=trial)
-                dt = time.perf_counter() - t0
-                accs.append(np.mean(h.accuracy))
-            rows[(alpha, strat)] = float(np.mean(accs))
-            emit(f"dirichlet/a{alpha}/{strat}", dt / cfg.global_epochs * 1e6,
+    for i, alpha in enumerate(alphas):
+        for j, strat in enumerate(STRATS):
+            rows[(alpha, strat)] = float(res.accuracy[i, j].mean())
+            emit(f"dirichlet/a{alpha}/{strat}", us_per_round,
                  f"mean_acc={rows[(alpha, strat)]:.4f}")
     return rows
 

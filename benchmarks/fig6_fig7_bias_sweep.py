@@ -1,41 +1,50 @@
 """Paper Figs. 6–7: FedAvg vs FedSGD vs Label-wise Clustering across bias
 probabilities p(x) ∈ {0.7, 0.4, 0.1} (image dataset; the paper used FMNIST &
-CIFAR-10 — synthetic class-conditional images here, DESIGN.md §8)."""
-from __future__ import annotations
+CIFAR-10 — synthetic class-conditional images here, DESIGN.md §8).
 
-import time
+The p-bias axis is the compiled grid's case axis; the two aggregation kinds
+compile separately (they lower different round bodies) but each covers its
+whole p × strategy × trial block in one program."""
+from __future__ import annotations
 
 import numpy as np
 
 from repro.core import bias_mix_plan
-from repro.fl import run_fl
+from repro.fl import run_grid
 from .common import emit, fl_cfg, trials
 
-ALGOS = [("fedavg", "random", "fedavg"),
-         ("fedsgd", "random", "fedsgd"),
-         ("labelwise", "labelwise", "fedavg")]
 P_BIAS = (0.7, 0.4, 0.1)
+# aggregation → strategies riding the same compiled grid
+GRIDS = (("fedavg", ("random", "labelwise")),
+         ("fedsgd", ("random",)))
+ALGO_NAME = {("fedavg", "random"): "fedavg", ("fedsgd", "random"): "fedsgd",
+             ("fedavg", "labelwise"): "labelwise"}
 
 
 def main(fast: bool = True) -> dict:
     cfg = fl_cfg(fast)
     n_max = 64 if fast else 270
     n_min = 24 if fast else 30
+    n_trials = trials(fast)
+    plans = np.stack([
+        np.stack([bias_mix_plan(100 + trial, cfg.num_clients, p_bias=p,
+                                n_max=n_max, n_min=n_min)
+                  for trial in range(n_trials)])
+        for p in P_BIAS])                                    # (P, R, 1, N, n)
+
     rows = {}
-    for p in P_BIAS:
-        for name, strat, agg in ALGOS:
-            accs = []
-            for trial in range(trials(fast)):
-                plan = bias_mix_plan(100 + trial, cfg.num_clients, p_bias=p,
-                                     n_max=n_max, n_min=n_min)
-                t0 = time.perf_counter()
-                h = run_fl(plan, cfg, strategy=strat, aggregation=agg,
-                           seed=trial)
-                dt = time.perf_counter() - t0
-                accs.append(np.mean(h.accuracy))  # convergence quality
-            rows[(p, name)] = (float(np.mean(accs)), float(np.std(accs)))
-            emit(f"fig6/p{p}/{name}", dt / cfg.global_epochs * 1e6,
-                 f"mean_acc={rows[(p, name)][0]:.4f}±{rows[(p, name)][1]:.4f}")
+    for agg, strats in GRIDS:
+        res = run_grid(plans, cfg, strategies=strats, seeds=range(n_trials),
+                       aggregation=agg)
+        us_per_round = (res.wall_s + res.compile_s) / (
+            len(P_BIAS) * len(strats) * n_trials * cfg.global_epochs) * 1e6
+        for i, p in enumerate(P_BIAS):
+            for j, strat in enumerate(strats):
+                name = ALGO_NAME[(agg, strat)]
+                mean_acc = res.accuracy[i, j].mean(axis=-1)  # (R,) conv quality
+                rows[(p, name)] = (float(mean_acc.mean()), float(mean_acc.std()))
+                emit(f"fig6/p{p}/{name}", us_per_round,
+                     f"mean_acc={rows[(p, name)][0]:.4f}±{rows[(p, name)][1]:.4f}")
     return rows
 
 

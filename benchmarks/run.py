@@ -21,6 +21,7 @@ SUITES = [
     ("fig8_fig9_cases_a", "benchmarks.fig8_fig9_cases_a"),
     ("fig10_table2_proportion", "benchmarks.fig10_table2_proportion"),
     ("dirichlet_ablation", "benchmarks.dirichlet_ablation"),
+    ("sim_grid", "benchmarks.sim_grid"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
 
@@ -29,7 +30,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--sim-grid", action="store_true",
+                    help="only run the compiled-engine vs host-loop grid "
+                         "comparison and emit BENCH_sim_grid.json")
     args = ap.parse_args(argv)
+    if args.sim_grid:
+        args.only = "sim_grid"
+    if args.only and args.only not in {n for n, _ in SUITES}:
+        ap.error(f"unknown suite {args.only!r}; have "
+                 f"{sorted(n for n, _ in SUITES)}")
 
     import importlib
     failures = []

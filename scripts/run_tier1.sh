@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Canonical tier-1 invocation: the fast unit tier (tests/conftest.py implies
+# -m "not slow").  Extra pytest args pass through, e.g.:
+#
+#   scripts/run_tier1.sh                          # fast tier, <60s
+#   scripts/run_tier1.sh -m "slow or not slow"    # everything
+#   scripts/run_tier1.sh -m slow                  # slow tier only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

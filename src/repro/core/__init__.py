@@ -11,7 +11,8 @@ from .selection import (SelectionResult, STRATEGIES, get_strategy,
                         select_random, select_labelwise, select_labelwise_unnorm,
                         select_coverage, select_kl, select_entropy, select_full)
 from .noniid import (CASES, case_label_plan, bias_mix_plan, dirichlet_plan,
-                     plan_round, SAMPLES_PER_CLIENT, MAJORITY_PER_CLIENT,
+                     plan_round, availability_plan, apply_availability,
+                     quantity_skew, SAMPLES_PER_CLIENT, MAJORITY_PER_CLIENT,
                      MINORITY_PER_CLIENT)
 from .aggregation import (masked_mean, fedavg_aggregate, fedsgd_aggregate,
                           interpolate, psum_aggregate, all_gather_scores)

@@ -25,6 +25,15 @@ Experiment partitioners:
                     static across rounds
     dirichlet     — standard Dirichlet(α) label skew (beyond-paper baseline)
 
+Composable scenario transforms (beyond-paper; grow the matrix past the six
+cases — any plan × any transform stack):
+    availability_plan / apply_availability — per-round client dropout: an
+        unavailable client's labels become −1 for the round, so it reports an
+        empty histogram and can never be selected (realistic cross-device FL)
+    quantity_skew — ragged n_i ~ U(n_min, n_max) per (round, client): each
+        client keeps a random subsample of its multiset, −1 tail padding stays
+        contiguous (the paper's fixed n=290 relaxed to heterogeneous sizes)
+
 Representation: int32 array (T, N, max_n); entries −1 are ragged-size padding
 (mask with ``labels >= 0``).  Host-side numpy: this is the data pipeline seam,
 not a jit region.
@@ -116,3 +125,74 @@ def dirichlet_plan(seed: int, num_clients: int, alpha: float,
 def plan_round(plan: np.ndarray, t: int) -> np.ndarray:
     """Labels for round t, handling static (T=1) plans."""
     return plan[t % plan.shape[0]]
+
+
+# ---------------------------------------------------------------------------
+# Composable scenario transforms
+# ---------------------------------------------------------------------------
+
+def availability_plan(seed: int, num_rounds: int, num_clients: int,
+                      p_drop: float, min_available: int = 1) -> np.ndarray:
+    """(T, N) bool availability mask: P(client i absent in round t) = p_drop.
+
+    At least ``min_available`` clients stay available every round (an all-dark
+    round has no defined FL semantics; real deployments retry)."""
+    rng = np.random.default_rng(seed)
+    avail = rng.random((num_rounds, num_clients)) >= p_drop
+    for t in range(num_rounds):
+        short = min_available - int(avail[t].sum())
+        if short > 0:
+            dark = np.flatnonzero(~avail[t])
+            avail[t, rng.choice(dark, size=short, replace=False)] = True
+    return avail
+
+
+def apply_availability(plan: np.ndarray, avail: np.ndarray) -> np.ndarray:
+    """Compose a label plan with a (T, N) availability mask.
+
+    Unavailable clients' labels become −1 for the round: they report empty
+    histograms (σ² undefined → invalid) so no strategy can select them, and
+    their data is never materialized.
+
+    Shape contract: plan (T_p, N, n), avail (T_a, N) with T_p == T_a or
+    either equal to 1 (a static plan is tiled to the mask's horizon and vice
+    versa)."""
+    if plan.ndim != 3 or avail.ndim != 2:
+        raise ValueError(f"need plan (T, N, n) and avail (T, N); got "
+                         f"{plan.shape} and {avail.shape}")
+    t_p, n, _ = plan.shape
+    t_a, n_a = avail.shape
+    if n_a != n or (t_p != t_a and 1 not in (t_p, t_a)):
+        raise ValueError(f"plan {plan.shape} and avail {avail.shape} do not "
+                         "compose: client counts must match and horizons "
+                         "must be equal or broadcastable from 1")
+    t = max(t_p, t_a)
+    if t_p != t:
+        plan = np.broadcast_to(plan, (t,) + plan.shape[1:])
+    if t_a != t:
+        avail = np.broadcast_to(avail, (t, n))
+    return np.where(avail[..., None], plan, np.int32(-1)).astype(np.int32)
+
+
+def quantity_skew(plan: np.ndarray, seed: int, n_min: int = 30,
+                  n_max: int | None = None) -> np.ndarray:
+    """Ragged per-client sample counts n_ti ~ U(n_min, n_max) over any plan.
+
+    Each (round, client) keeps a uniform random *subsample* of its label
+    multiset (preserving the case's mixture in expectation, unlike a prefix
+    cut which would drop B-case minorities) and pads the tail with −1 — the
+    padding stays contiguous.  Rows already shorter than the drawn n_ti keep
+    their existing count, so −1 entries never resurrect."""
+    t, n, s = plan.shape
+    n_max = s if n_max is None else min(n_max, s)
+    if not 0 < n_min <= n_max:
+        raise ValueError(f"need 0 < n_min ≤ n_max ≤ {s}; got [{n_min}, {n_max}]")
+    rng = np.random.default_rng(seed)
+    # Shuffle each row's valid entries (padding sinks to the tail), then cut.
+    keys = rng.random(plan.shape)
+    keys[plan < 0] = 2.0
+    order = np.argsort(keys, axis=-1)
+    shuffled = np.take_along_axis(plan, order, axis=-1)
+    sizes = rng.integers(n_min, n_max + 1, size=(t, n))
+    keep = np.arange(s)[None, None, :] < sizes[..., None]
+    return np.where(keep, shuffled, np.int32(-1)).astype(np.int32)

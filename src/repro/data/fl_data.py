@@ -3,10 +3,16 @@
 A round batch is a fixed-shape SPMD-friendly structure:
     images: (N, n_max, H, W, C)   labels: (N, n_max) int32 (−1 pad)
     valid:  (N, n_max) bool       hists:  (N, C) f32
+
+jit contract: everything here is shape-polymorphic only in *static* shapes —
+``plan_t`` may be a TRACED int32 array (the compiled simulator's lax.scan
+slices label plans on device), and every op below (gather, where, one-hot
+histogram, pad/reshape with static sizes) traces cleanly.  Host numpy plans
+are accepted too and enter the device exactly once.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Union
 
 import jax
 import jax.numpy as jnp
@@ -18,9 +24,10 @@ from .synthetic import ImageDataset
 Array = jax.Array
 
 
-def materialize_round(ds: ImageDataset, plan_t: np.ndarray, key: Array
-                      ) -> Dict[str, Array]:
-    """plan_t: (N, n_max) int32 labels with −1 padding → round batch."""
+def materialize_round(ds: ImageDataset, plan_t: Union[np.ndarray, Array],
+                      key: Array) -> Dict[str, Array]:
+    """plan_t: (N, n_max) int32 labels with −1 padding (host numpy or traced
+    device array) → round batch."""
     labels = jnp.asarray(plan_t, jnp.int32)
     valid = labels >= 0
     images = ds.sample(key, labels)

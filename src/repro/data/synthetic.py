@@ -45,7 +45,13 @@ class ImageDataset:
         self.templates = jnp.asarray(smooth, jnp.float32)
 
     def sample(self, key: Array, labels: Array) -> Array:
-        """labels: (...,) int32 → images (..., H, W, C); label −1 → zeros."""
+        """labels: (...,) int32 → images (..., H, W, C); label −1 → zeros.
+
+        ``labels`` may be traced (gather + mask only) — the compiled FL
+        simulator materializes data inside lax.scan from device-resident
+        plans; the templates are closed-over constants baked into the
+        executable once."""
+        labels = jnp.asarray(labels, jnp.int32)
         safe = jnp.maximum(labels, 0)
         base = self.templates[safe]
         noise = jax.random.normal(key, base.shape) * self.noise

@@ -1,8 +1,12 @@
 from .client import local_train, local_gradient
 from .round import make_fl_round
-from .loop import run_fl, FLHistory, success_rate, cnn_batch_loss
+from .loop import run_fl, run_fl_host, FLHistory, success_rate, cnn_batch_loss
 from .sharded import make_sharded_fl_round, topn_mask_from_scores
+from .sim import (ENGINE_STRATEGIES, GridResult, make_trial_fn, run_grid,
+                  simulate, stack_case_plans, strategy_id)
 
 __all__ = ["local_train", "local_gradient", "make_fl_round", "run_fl",
-           "FLHistory", "success_rate", "cnn_batch_loss",
-           "make_sharded_fl_round", "topn_mask_from_scores"]
+           "run_fl_host", "FLHistory", "success_rate", "cnn_batch_loss",
+           "make_sharded_fl_round", "topn_mask_from_scores",
+           "ENGINE_STRATEGIES", "GridResult", "make_trial_fn", "run_grid",
+           "simulate", "stack_case_plans", "strategy_id"]

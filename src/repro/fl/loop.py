@@ -1,11 +1,23 @@
-"""Host-side FL training loop: rounds × (materialize → select → train →
-aggregate → evaluate).  This is the end-to-end driver the paper's experiments
-(§VI) run on; examples/ and benchmarks/ call into it."""
+"""FL training-loop front-end: ``run_fl`` — rounds × (materialize → select →
+train → aggregate → evaluate).  This is the end-to-end driver the paper's
+experiments (§VI) run on; examples/ and benchmarks/ call into it.
+
+Two execution engines share the same math and randomness:
+
+* ``engine="sim"`` (default) — the compiled simulator (repro.fl.sim): the
+  round loop is a device-resident lax.scan, one jit for the whole trial.
+* ``engine="host"`` — the legacy per-round host loop, kept as the parity
+  oracle (tests/test_fl_sim.py) and the baseline the BENCH_sim_grid speedup
+  is measured against.
+
+Both use the identical fold_in key tree, so trajectories agree within float
+tolerance.
+"""
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,8 +60,41 @@ def evaluate_cnn(params: PyTree, test_images: Array, test_labels: Array):
 def run_fl(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
            aggregation: Optional[str] = None, rounds: Optional[int] = None,
            ds: Optional[ImageDataset] = None, seed: Optional[int] = None,
-           verbose: bool = False) -> FLHistory:
+           verbose: bool = False, engine: str = "sim",
+           avail: Optional[np.ndarray] = None,
+           eval_n_per_class: int = 50) -> FLHistory:
     """Run FL on the paper CNN over a non-IID label plan.  Returns history."""
+    if engine == "host":
+        if avail is not None:
+            raise ValueError("availability masks need engine='sim' "
+                             "(or pre-compose with apply_availability)")
+        return run_fl_host(plan, fl_cfg, strategy=strategy,
+                           aggregation=aggregation, rounds=rounds, ds=ds,
+                           seed=seed, verbose=verbose,
+                           eval_n_per_class=eval_n_per_class)
+    if engine != "sim":
+        raise ValueError(f"unknown engine {engine!r}; have 'sim', 'host'")
+    from . import sim
+    res = sim.simulate(plan, fl_cfg, strategy=strategy, aggregation=aggregation,
+                       rounds=rounds, ds=ds, seed=seed, avail=avail,
+                       eval_n_per_class=eval_n_per_class)
+    hist = FLHistory([float(a) for a in res.accuracy],
+                     [float(l) for l in res.loss],
+                     [float(s) for s in res.num_selected],
+                     res.wall_s + res.compile_s)
+    if verbose:
+        for t, (a, l, s) in enumerate(zip(hist.accuracy, hist.loss,
+                                          hist.num_selected)):
+            print(f"  round {t + 1:3d}/{len(hist.accuracy)}: acc={a:.4f} "
+                  f"loss={l:.4f} selected={s:.0f}")
+    return hist
+
+
+def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
+                aggregation: Optional[str] = None, rounds: Optional[int] = None,
+                ds: Optional[ImageDataset] = None, seed: Optional[int] = None,
+                verbose: bool = False, eval_n_per_class: int = 50) -> FLHistory:
+    """Legacy host-driven loop: one jitted round per step, eval on host."""
     ds = ds or ImageDataset()
     seed = fl_cfg.seed if seed is None else seed
     rounds = rounds or fl_cfg.global_epochs
@@ -57,7 +102,7 @@ def run_fl(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
     params = cnn_init(jax.random.fold_in(key, 1), num_classes=ds.num_classes,
                       image_size=ds.image_size, channels=ds.channels)
     fl_round = make_fl_round(cnn_batch_loss, fl_cfg, strategy, aggregation)
-    test_x, test_y = ds.test_set()
+    test_x, test_y = ds.test_set(eval_n_per_class)
     eval_jit = jax.jit(lambda p: cnn_loss(p, test_x, test_y))
 
     hist_acc, hist_loss, hist_sel = [], [], []

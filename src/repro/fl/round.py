@@ -27,6 +27,43 @@ Array = jax.Array
 PyTree = Any
 
 
+def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
+                       live: Array, loss_fn, opt, fl_cfg, agg_kind: str
+                       ) -> Tuple[PyTree, Dict[str, Array]]:
+    """Local training + masked aggregation + server update for the selected
+    client subset — the round math shared verbatim by the jitted host round
+    (below) and the compiled simulator (repro.fl.sim), so a change here
+    cannot desynchronize the two engines.
+
+    data_sel: leaves (n_sel, n_batches, batch_size, ...); live: (n_sel,) 0/1.
+    Returns (new_global_params, per-client metrics).
+    """
+    n_sel = live.shape[0]
+    sizes = data_sel["valid"].reshape(n_sel, -1).sum(-1).astype(jnp.float32)
+
+    if agg_kind == "fedsgd":
+        grads, m = jax.vmap(
+            lambda b: local_gradient(global_params, b, loss_fn))(data_sel)
+        agg_g = fedavg_aggregate(grads, live, sizes)
+        new_params = apply_updates(
+            global_params,
+            jax.tree_util.tree_map(lambda g: -fl_cfg.lr * g, agg_g))
+    else:
+        trained, m = jax.vmap(
+            lambda b: local_train(global_params, opt, b, loss_fn,
+                                  fl_cfg.local_epochs))(data_sel)
+        agg = fedavg_aggregate(trained, live, sizes)
+        new_params = interpolate(global_params, agg, fl_cfg.server_lr)
+
+    # Algorithm 1's count=0 degradation: an empty selection must leave the
+    # global params untouched (the ε-denominator mean would zero them).
+    any_live = live.sum() > 0
+    new_params = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(any_live, new, old),
+        new_params, global_params)
+    return new_params, m
+
+
 def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
                   aggregation: str | None = None) -> Callable:
     """Build the jitted round function.
@@ -48,21 +85,8 @@ def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
         idx = sel.order[:n_sel]                       # clients asked to train
         live = sel.mask[idx]                          # 0 where count < n
         data_sel = jax.tree_util.tree_map(lambda x: x[idx], round_batches)
-        sizes = data_sel["valid"].reshape(n_sel, -1).sum(-1).astype(jnp.float32)
-
-        if agg_kind == "fedsgd":
-            grads, m = jax.vmap(
-                lambda b: local_gradient(global_params, b, loss_fn))(data_sel)
-            agg_g = fedavg_aggregate(grads, live, sizes)
-            new_params = apply_updates(
-                global_params,
-                jax.tree_util.tree_map(lambda g: -fl_cfg.lr * g, agg_g))
-        else:
-            trained, m = jax.vmap(
-                lambda b: local_train(global_params, opt, b, loss_fn,
-                                      fl_cfg.local_epochs))(data_sel)
-            agg = fedavg_aggregate(trained, live, sizes)
-            new_params = interpolate(global_params, agg, fl_cfg.server_lr)
+        new_params, m = client_update_step(global_params, data_sel, live,
+                                           loss_fn, opt, fl_cfg, agg_kind)
 
         info = {
             "selected": idx,

@@ -61,7 +61,7 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
                           local_step: Callable[[PyTree, Dict[str, Array]], PyTree],
                           n_select: int, num_classes: int,
                           params_pspec: PyTree, batch_pspec: PyTree,
-                          agg_dtype=None) -> Callable:
+                          agg_dtype=None, with_availability: bool = False) -> Callable:
     """Build the SPMD FL round.
 
     ``local_step(params, batch) -> params`` is the client's local training
@@ -69,18 +69,29 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
     ``params_pspec``/``batch_pspec`` are PartitionSpecs WITHOUT the client
     axis (they describe intra-group sharding); the batch gains a leading
     client-sharded axis here.
+
+    ``with_availability=True`` adds a trailing ``avail`` argument — a (N,)
+    0/1 per-group availability vector (repro.core.noniid.availability_plan
+    row), sharded over the client axis.  An unavailable group's score is
+    forced to 0 (the σ²≠0 gate then excludes it) and it is masked out of the
+    aggregation even if every group is dark.
     """
     n_groups = mesh.shape[client_axis]
 
     def round_fn(params: PyTree, batch: Dict[str, Array], labels: Array,
-                 valid: Array) -> Tuple[PyTree, Dict[str, Array]]:
+                 valid: Array, avail: Array | None = None
+                 ) -> Tuple[PyTree, Dict[str, Array]]:
         # labels/valid: (clients_total, n_i) sharded over client axis →
         # per-shard (clients_per_group, n_i).
         hist = histogram(jnp.where(valid, labels, 0), num_classes, valid).sum(0)
         score = label_variance_normed(hist[None])[0]
+        if avail is not None:
+            score = score * avail.reshape(()).astype(score.dtype)
         scores = jax.lax.all_gather(score, client_axis)        # (n_groups,)
         mask = topn_mask_from_scores(scores, n_select)
         my_mask = mask[jax.lax.axis_index(client_axis)]
+        if avail is not None:
+            my_mask = my_mask * avail.reshape(()).astype(my_mask.dtype)
 
         new_local = local_step(params, batch)
         dt = agg_dtype or jnp.float32
@@ -105,7 +116,10 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
     lv_spec = P(client_axis)
     out_info_spec = {"mask": P(), "num_selected": P(), "scores": P()}
 
+    in_specs = (params_pspec, batch_specs, lv_spec, lv_spec)
+    if with_availability:
+        in_specs = in_specs + (lv_spec,)
     return shard_map(
         round_fn, mesh,
-        in_specs=(params_pspec, batch_specs, lv_spec, lv_spec),
+        in_specs=in_specs,
         out_specs=(params_pspec, out_info_spec))

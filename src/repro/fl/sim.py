@@ -1,0 +1,274 @@
+"""Compiled multi-trial FL simulation engine: the whole experiment is ONE
+XLA program.
+
+The legacy host loop (repro.fl.loop.run_fl_host) drives every round from
+Python — per-round host↔device transfers, a fresh jit per trial — so a
+Table-I grid (cases × strategies × seeds) scales linearly in wall-clock with
+grid size.  Here the round loop is a ``jax.lax.scan`` (device-resident label
+plans → synthetic materialization → selection → vmapped local training →
+aggregation → eval, all folded into the carried state), selection strategies
+become a traced stack+index dispatch (a batchable axis over the requested
+strategy set), and the whole thing is ``jax.vmap``-ed over seeds ×
+strategies × cases.  One compile, zero host
+round-trips, the full grid in a single device launch:
+
+    plans = stack_case_plans(CASES, cfg, seed0=0)          # (K, T, N, n)
+    res = run_grid(plans, cfg, strategies=("random", "labelwise"),
+                   seeds=range(5))                         # one compiled call
+    res.accuracy            # (K, S, R, rounds) f32
+
+Per-trial key derivation, round math, and evaluation are bit-compatible with
+the host loop (same fold_in tree, same ops), so trajectories match within
+float tolerance — tests/test_fl_sim.py pins this parity.
+
+Scenario transforms compose: plans may carry −1 padding from
+``quantity_skew`` / ``apply_availability`` (repro.core.noniid), and
+``avail`` threads a (T, N) availability mask into selection on-device —
+an unavailable client reports an empty histogram and cannot be selected.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import STRATEGIES
+from repro.data import ImageDataset, client_batches, materialize_round
+from repro.models import cnn_init, cnn_loss
+from repro.optim import get_optimizer
+from .round import client_update_step
+
+Array = jax.Array
+PyTree = Any
+
+# Fixed strategy universe — index into this tuple is the batched "strategy"
+# axis.  Explicit literal, append-only: reordering (or deriving the order
+# from a dict/sort) silently remaps saved grid indices.  tests/test_fl_sim.py
+# pins both the ids and set-equality with the STRATEGIES registry.
+ENGINE_STRATEGIES: Tuple[str, ...] = (
+    "random", "labelwise", "labelwise_unnorm", "coverage", "kl", "entropy",
+    "full")
+
+
+def strategy_id(name: str) -> int:
+    """Stable integer id of a selection strategy (the lax.switch branch)."""
+    try:
+        return ENGINE_STRATEGIES.index(name)
+    except ValueError:
+        raise KeyError(f"unknown strategy {name!r}; have {ENGINE_STRATEGIES}") from None
+
+
+@dataclasses.dataclass
+class GridResult:
+    """Stacked trajectories from one compiled grid.
+
+    Leading axes follow the call: (*grid_axes, rounds) where grid_axes is
+    (cases, strategies, seeds) for run_grid, or () for simulate.
+    """
+    accuracy: np.ndarray
+    loss: np.ndarray
+    num_selected: np.ndarray
+    wall_s: float
+    compile_s: float = 0.0
+
+    @property
+    def final_accuracy(self) -> np.ndarray:
+        return self.accuracy[..., -1]
+
+    def success_rate(self, threshold: float = 0.2, axis: int = -1) -> np.ndarray:
+        """Paper Table II: fraction of seed-axis trials with final acc > τ.
+
+        On a single-trial result (simulate()) there is no trial axis to
+        average over; the 0/1 success indicator is returned instead."""
+        success = self.accuracy[..., -1] > threshold
+        if success.ndim == 0:
+            return success.astype(np.float64)
+        return success.mean(axis=axis)
+
+
+def _select(sid: Array, key: Array, hists: Array, n_sel: int,
+            universe: Sequence[str]):
+    """Traced strategy dispatch → (mask, scores, order).
+
+    Every strategy in ``universe`` is computed unconditionally (each is
+    sub-millisecond math on an (N, C) histogram) and the requested one is
+    gathered by ``sid`` — an index into ``universe``, NOT a global
+    strategy_id.  Deliberately stack+index rather than ``lax.switch``: under
+    a batched ``sid`` a switch lowers to run-all-branches-and-select anyway,
+    and the branch-free form keeps the scan body a single straight-line
+    graph.  The universe is the *requested* strategy set, so the compiled
+    program only pays for the strategies the grid actually runs; a
+    single-entry universe compiles to a direct call."""
+    if len(universe) == 1:
+        r = STRATEGIES[universe[0]](key, hists, n_sel)
+        return r.mask, r.scores, r.order
+    rs = [STRATEGIES[n](key, hists, n_sel) for n in universe]
+    masks = jnp.stack([r.mask for r in rs])
+    scores = jnp.stack([r.scores for r in rs])
+    orders = jnp.stack([r.order for r in rs])
+    return masks[sid], scores[sid], orders[sid]
+
+
+def make_trial_fn(fl_cfg, ds: Optional[ImageDataset] = None, *,
+                  aggregation: Optional[str] = None,
+                  rounds: Optional[int] = None,
+                  eval_n_per_class: int = 50,
+                  strategies: Optional[Sequence[str]] = None):
+    """Build ``trial(plan, sid, seed, avail) -> (acc, loss, nsel)`` — one FL
+    trial as a pure jit/vmap-able function of device arrays.
+
+    plan: (T, N, n_max) int32 (−1 pad); sid: scalar int32 index into
+    ``strategies`` (default: the full ENGINE_STRATEGIES universe);
+    seed: scalar int32; avail: (T, N) f32 availability (pass all-ones for
+    the no-dropout scenario).  Returns three (rounds,) f32 trajectories.
+    """
+    ds = ds or ImageDataset()
+    universe = tuple(strategies) if strategies is not None else ENGINE_STRATEGIES
+    for name in universe:
+        strategy_id(name)  # validate early: unknown names raise here
+    agg_kind = aggregation or fl_cfg.aggregation
+    n_sel = fl_cfg.clients_per_round
+    num_rounds = rounds or fl_cfg.global_epochs
+    opt = get_optimizer(fl_cfg.optimizer, fl_cfg.lr)
+    test_x, test_y = ds.test_set(eval_n_per_class)
+
+    def loss_fn(params, batch):
+        return cnn_loss(params, batch["images"], batch["labels"], batch["valid"])
+
+    def trial(plan: Array, sid: Array, seed: Array, avail: Array):
+        t_static = plan.shape[0]
+        key = jax.random.PRNGKey(seed)
+        params = cnn_init(jax.random.fold_in(key, 1), num_classes=ds.num_classes,
+                          image_size=ds.image_size, channels=ds.channels)
+
+        def round_body(params, t):
+            # Same fold_in tree as the host loop — parity is bit-for-bit in
+            # the randomness, so trajectories differ only by op reordering.
+            kt = jax.random.fold_in(key, 1000 + t)
+            plan_t = jax.lax.dynamic_index_in_dim(plan, t % t_static, 0,
+                                                  keepdims=False)
+            avail_t = jax.lax.dynamic_index_in_dim(avail, t % avail.shape[0], 0,
+                                                   keepdims=False)
+            data = materialize_round(ds, plan_t, jax.random.fold_in(kt, 0))
+            hists = data["hists"] * avail_t[:, None]
+            batches = client_batches(data, fl_cfg.batch_size)
+            mask, scores, order = _select(sid, jax.random.fold_in(kt, 1),
+                                          hists, n_sel, universe)
+            idx = order[:n_sel]
+            live = mask[idx] * avail_t[idx]
+            data_sel = jax.tree_util.tree_map(lambda x: x[idx], batches)
+            new_params, m = client_update_step(params, data_sel, live,
+                                               loss_fn, opt, fl_cfg, agg_kind)
+
+            ev_loss, ev_m = cnn_loss(new_params, test_x, test_y)
+            return new_params, (ev_m["accuracy"], ev_loss, live.sum())
+
+        _, (acc, loss, nsel) = jax.lax.scan(round_body, params,
+                                            jnp.arange(num_rounds))
+        return acc, loss, nsel
+
+    return trial
+
+
+def _ones_avail(plan: np.ndarray) -> jnp.ndarray:
+    return jnp.ones(plan.shape[:2], jnp.float32)
+
+
+def simulate(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
+             aggregation: Optional[str] = None, rounds: Optional[int] = None,
+             ds: Optional[ImageDataset] = None, seed: Optional[int] = None,
+             avail: Optional[np.ndarray] = None,
+             eval_n_per_class: int = 50) -> GridResult:
+    """One FL trial through the compiled engine (host-loop-compatible knobs)."""
+    import time
+    name = strategy or fl_cfg.selection
+    trial = make_trial_fn(fl_cfg, ds, aggregation=aggregation, rounds=rounds,
+                          eval_n_per_class=eval_n_per_class,
+                          strategies=(name,))
+    sid = jnp.int32(0)      # single-entry universe → direct call inside
+    seed = fl_cfg.seed if seed is None else seed
+    av = (jnp.asarray(avail, jnp.float32) if avail is not None
+          else _ones_avail(plan))
+    fn = jax.jit(trial)
+    t0 = time.perf_counter()
+    lowered = fn.lower(jnp.asarray(plan, jnp.int32), sid, jnp.int32(seed), av)
+    compiled = lowered.compile()
+    t1 = time.perf_counter()
+    acc, loss, nsel = jax.block_until_ready(
+        compiled(jnp.asarray(plan, jnp.int32), sid, jnp.int32(seed), av))
+    t2 = time.perf_counter()
+    return GridResult(np.asarray(acc), np.asarray(loss), np.asarray(nsel),
+                      wall_s=t2 - t1, compile_s=t1 - t0)
+
+
+def run_grid(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
+             seeds: Sequence[int], aggregation: Optional[str] = None,
+             rounds: Optional[int] = None, ds: Optional[ImageDataset] = None,
+             avail: Optional[np.ndarray] = None,
+             eval_n_per_class: int = 50) -> GridResult:
+    """The whole grid — cases × strategies × seeds — as ONE compiled program.
+
+    plans: (K, T, N, n_max) int32 stacked label plans (all cases must share
+    T/N/n_max — pad with −1 to the common n_max), or (K, R, T, N, n_max) to
+    give every seed its own plan draw (the paper's per-trial re-partition).
+    avail: optional (T, N) or (K, T, N) availability masks.  Returns
+    trajectories with leading axes (K, len(strategies), len(seeds)).
+    """
+    import time
+    plans = np.asarray(plans)
+    seeds = list(seeds)          # consume a one-shot iterable exactly once
+    per_seed = plans.ndim == 5
+    if plans.ndim not in (4, 5):
+        raise ValueError(f"plans must be (K[, R], T, N, n); got {plans.shape}")
+    if per_seed and plans.shape[1] != len(seeds):
+        raise ValueError(f"per-seed plans axis 1 ({plans.shape[1]}) must match "
+                         f"len(seeds) ({len(seeds)})")
+    strategies = tuple(strategies)
+    trial = make_trial_fn(fl_cfg, ds, aggregation=aggregation, rounds=rounds,
+                          eval_n_per_class=eval_n_per_class,
+                          strategies=strategies)
+    # sids index the requested universe (the compiled program only contains
+    # these strategies); position i of the output's strategy axis is
+    # strategies[i].
+    sids = jnp.arange(len(strategies), dtype=jnp.int32)
+    seed_arr = jnp.asarray(seeds, jnp.int32)
+    tn = plans.shape[-3:-1]                              # (T, N)
+    if avail is None:
+        av = jnp.ones((plans.shape[0],) + tn, jnp.float32)
+    else:
+        av = jnp.asarray(avail, jnp.float32)
+        if av.ndim == 2:
+            av = jnp.broadcast_to(av[None], (plans.shape[0],) + av.shape)
+
+    f = jax.vmap(trial, in_axes=(0 if per_seed else None, None, 0, None))  # seeds
+    f = jax.vmap(f, in_axes=(None, 0, None, None))       # strategies
+    f = jax.vmap(f, in_axes=(0, None, None, 0))          # cases
+    fn = jax.jit(f)
+    args = (jnp.asarray(plans, jnp.int32), sids, seed_arr, av)
+    t0 = time.perf_counter()
+    compiled = fn.lower(*args).compile()
+    t1 = time.perf_counter()
+    acc, loss, nsel = jax.block_until_ready(compiled(*args))
+    t2 = time.perf_counter()
+    return GridResult(np.asarray(acc), np.asarray(loss), np.asarray(nsel),
+                      wall_s=t2 - t1, compile_s=t1 - t0)
+
+
+def stack_case_plans(cases: Sequence[str], fl_cfg, *, seed0: int = 0,
+                     rounds: Optional[int] = None,
+                     samples_per_client: Optional[int] = None,
+                     majority: Optional[int] = None,
+                     num_classes: int = 10) -> np.ndarray:
+    """(K, T, N, n) stacked §III case plans sharing one shape — run_grid food."""
+    from repro.core import case_label_plan, SAMPLES_PER_CLIENT
+    spc = samples_per_client or SAMPLES_PER_CLIENT
+    maj = majority if majority is not None else int(spc * 200 / 290)
+    t = rounds or fl_cfg.global_epochs
+    return np.stack([
+        case_label_plan(c, seed=seed0, num_rounds=t,
+                        num_clients=fl_cfg.num_clients, num_classes=num_classes,
+                        samples_per_client=spc, majority=maj)
+        for c in cases])

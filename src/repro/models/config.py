@@ -39,6 +39,8 @@ class ModelConfig:
     moe_layer_period: int = 1          # every k-th block's ffn is MoE
     capacity_factor: float = 1.25
     router_aux_weight: float = 0.01
+    moe_dropless: bool = False         # exact routing (no capacity drops);
+                                       # required for prefill/decode ≡ forward
 
     # SSM (mamba2 / jamba)
     ssm_state: int = 0
@@ -130,6 +132,10 @@ class ModelConfig:
             attn_layer_offset=1 if self.arch_type == "hybrid" else self.attn_layer_offset,
             attn_layer_period=2 if self.arch_type == "hybrid" else self.attn_layer_period,
             moe_layer_period=min(self.moe_layer_period, 2),
+            # Smoke tier asserts cached-decode ≡ dense-forward; capacity
+            # dropping is call-size dependent (a decode step never competes
+            # for capacity, a full forward may), so parity needs exact routing.
+            moe_dropless=True,
             fsdp=False, remat=False, scan_layers=False,
             name=self.name + "-smoke",
         )

@@ -385,6 +385,22 @@ def moe_apply(p: PyTree, x: Array, cfg: ModelConfig,
     pe = probs.mean(0)
     aux = e * jnp.sum(me * pe)
 
+    if cfg.moe_dropless:
+        # Exact per-token routing: every token's top-k experts contribute,
+        # independent of the other tokens in the call.  Capacity dropping is
+        # call-size dependent (a 1-token decode step never overflows, a full
+        # forward can), so it breaks cached-decode ≡ dense-forward parity —
+        # dropless is the serving-consistent semantic.  Dense all-experts
+        # compute (E/K extra FLOPs): only for small-t / smoke configs.
+        act = jax.nn.silu if cfg.activation != "gelu_glu" else jax.nn.gelu
+        combine = jnp.zeros((t, e), jnp.float32)
+        combine = combine.at[jnp.arange(t)[:, None], gate_idx].add(gate_vals)
+        g = jnp.einsum("td,edf->tef", xt, p["w_gate"])
+        u = jnp.einsum("td,edf->tef", xt, p["w_up"])
+        y = jnp.einsum("tef,efd,te->td", act(g) * u, p["w2"],
+                       combine.astype(x.dtype))
+        return y.reshape(b, s, d), aux
+
     cap = int(math.ceil(k * t * cfg.capacity_factor / e))
     cap = max(8, -(-cap // 8) * 8)
 

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-minute tier; see tests/conftest.py
+
 from repro.configs import ARCH_IDS, get_config
 from repro.models import (init_model, loss_fn, forward, prefill, decode_step)
 

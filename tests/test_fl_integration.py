@@ -11,6 +11,8 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
+pytestmark = pytest.mark.slow  # multi-minute tier; see tests/conftest.py
+
 from repro.configs.paper_cnn import FLConfig
 from repro.core import case_label_plan, bias_mix_plan
 from repro.data import ImageDataset
@@ -93,6 +95,38 @@ class TestShardedRound:
                                     jnp.asarray(labels), jnp.asarray(valid))
         assert float(info["num_selected"]) == 1.0
         # group 0 was selected; its delta = mean of its x = 0.5
+        np.testing.assert_allclose(np.asarray(new_params["w"]), 0.5, rtol=1e-6)
+
+    def test_sharded_round_availability_mask(self):
+        """with_availability=True: a dark group is excluded from selection
+        even when it is the only σ²>0 group — global params stay put."""
+        n_dev = jax.device_count()
+        mesh = jax.make_mesh((n_dev,), ("clients",))
+        num_classes = 4
+
+        def local_step(params, batch):
+            return {"w": params["w"] + batch["x"].mean()}
+
+        round_fn = make_sharded_fl_round(
+            mesh, "clients", local_step, n_select=1, num_classes=num_classes,
+            params_pspec={"w": P()}, batch_pspec={"x": P()},
+            with_availability=True,
+        )
+        params = {"w": jnp.zeros((3,), jnp.float32)}
+        batch = {"x": jnp.arange(n_dev * 2, dtype=jnp.float32).reshape(n_dev, 2)}
+        labels = np.zeros((n_dev, 8), np.int32)
+        labels[0, :4] = np.arange(4)          # only group 0 has σ² > 0
+        valid = np.ones((n_dev, 8), bool)
+        avail = np.zeros((n_dev,), np.float32)  # ...but every group is dark
+        new_params, info = round_fn(params, batch, jnp.asarray(labels),
+                                    jnp.asarray(valid), jnp.asarray(avail))
+        assert float(info["num_selected"]) == 0.0
+        np.testing.assert_allclose(np.asarray(new_params["w"]), 0.0, atol=1e-7)
+        # and with group 0 available again, it is selected as before
+        avail[0] = 1.0
+        new_params, info = round_fn(params, batch, jnp.asarray(labels),
+                                    jnp.asarray(valid), jnp.asarray(avail))
+        assert float(info["num_selected"]) == 1.0
         np.testing.assert_allclose(np.asarray(new_params["w"]), 0.5, rtol=1e-6)
 
 

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # interpret-mode kernel sweeps; see conftest.py
+
 from repro.kernels import (aggregate_params, attention_ref, client_statistics,
                            flash_attention, gqa_flash_attention,
                            label_hist_kernel, label_hist_ref, ssd_apply,

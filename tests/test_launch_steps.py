@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # per-arch lowering, minutes; see conftest.py
+
 from repro import sharding as sh
 from repro.configs import get_config
 from repro.configs.shapes import InputShape

@@ -1,0 +1,159 @@
+"""Property-based tests for the scenario transforms (availability dropout +
+quantity skew) composed over the six §III cases.
+
+Uses hypothesis when installed; otherwise a minimal seeded fallback driver
+draws 20 random examples per property (the container image does not ship
+hypothesis and the test semantics — randomized inputs, fixed seed — survive
+the downgrade; only shrinking is lost).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CASES, STRATEGIES, apply_availability,
+                        availability_plan, case_label_plan, histogram,
+                        quantity_skew)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    def integers(lo, hi):
+        return st.integers(min_value=lo, max_value=hi)
+
+    def sampled_from(seq):
+        return st.sampled_from(list(seq))
+
+    def floats(lo, hi):
+        return st.floats(min_value=lo, max_value=hi)
+
+    def prop(**strats):
+        def deco(f):
+            return settings(max_examples=20, deadline=None)(given(**strats)(f))
+        return deco
+except ImportError:  # pragma: no cover — fallback driver
+    class _Strat:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def integers(lo, hi):
+        return _Strat(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strat(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    def floats(lo, hi):
+        return _Strat(lambda rng: float(rng.uniform(lo, hi)))
+
+    def prop(**strats):
+        def deco(f):
+            # No functools.wraps: copying f's signature would make pytest
+            # treat the drawn parameters as fixtures.
+            def wrapper(self):
+                rng = np.random.default_rng(0)
+                for _ in range(20):
+                    f(self, **{k: s.draw(rng) for k, s in strats.items()})
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco
+
+
+def _plan(case, seed, rounds=3, clients=6, spc=20):
+    return case_label_plan(case, seed=seed, num_rounds=rounds,
+                           num_clients=clients, samples_per_client=spc,
+                           majority=int(spc * 200 / 290))
+
+
+class TestAvailabilityProperties:
+    @prop(case=sampled_from(CASES), seed=integers(0, 999),
+          p_drop=floats(0.0, 0.9))
+    def test_unavailable_client_never_selectable(self, case, seed, p_drop):
+        """Composing a dropout mask leaves dark clients with empty histograms
+        → every strategy's validity gate excludes them."""
+        import jax
+        plan = _plan(case, seed)
+        avail = availability_plan(seed + 1, 3, 6, p_drop)
+        composed = apply_availability(plan, avail)
+        t = int(np.random.default_rng(seed).integers(3))
+        labels = composed[t]
+        valid = labels >= 0
+        hists = histogram(np.where(valid, labels, 0), 10, valid)
+        key = jax.random.PRNGKey(seed)
+        for name, strat in STRATEGIES.items():
+            mask = np.asarray(strat(key, hists, 3).mask)
+            dark = ~avail[t]
+            assert (mask[dark] == 0).all(), (name, case, t)
+
+    @prop(seed=integers(0, 999), p_drop=floats(0.0, 1.0))
+    def test_min_available_floor(self, seed, p_drop):
+        avail = availability_plan(seed, 5, 8, p_drop, min_available=2)
+        assert (avail.sum(axis=1) >= 2).all()
+        assert avail.shape == (5, 8) and avail.dtype == bool
+
+    @prop(case=sampled_from(CASES), seed=integers(0, 999))
+    def test_static_plan_tiled_to_mask_horizon(self, case, seed):
+        plan = _plan(case, seed, rounds=1)
+        avail = availability_plan(seed, 4, 6, 0.3)
+        out = apply_availability(plan, avail)
+        assert out.shape == (4, 6, 20)
+        # available (round, client) slots keep the original labels
+        for t in range(4):
+            for i in range(6):
+                if avail[t, i]:
+                    np.testing.assert_array_equal(out[t, i], plan[0, i])
+                else:
+                    assert (out[t, i] == -1).all()
+
+
+class TestQuantitySkewProperties:
+    @prop(case=sampled_from(CASES), seed=integers(0, 999),
+          n_min=integers(1, 8), extra=integers(0, 12))
+    def test_padding_contiguous_and_counts_bounded(self, case, seed, n_min,
+                                                   extra):
+        n_max = n_min + extra
+        plan = _plan(case, seed)
+        out = quantity_skew(plan, seed + 7, n_min=n_min, n_max=n_max)
+        assert out.shape == plan.shape and out.dtype == np.int32
+        valid = out >= 0
+        counts = valid.sum(axis=-1)
+        assert (counts >= n_min).all() and (counts <= min(n_max, 20)).all()
+        # −1 padding is a contiguous tail: once invalid, never valid again
+        tail_is_pad = np.logical_or.accumulate(~valid, axis=-1)
+        assert not (valid & tail_is_pad).any()
+
+    @prop(case=sampled_from(CASES), seed=integers(0, 999))
+    def test_kept_labels_are_a_subsample(self, case, seed):
+        """Quantity skew never invents labels: each row's kept multiset is
+        contained in the original multiset."""
+        plan = _plan(case, seed, rounds=2)
+        out = quantity_skew(plan, seed, n_min=5, n_max=15)
+        for t in range(2):
+            for i in range(plan.shape[1]):
+                orig = np.bincount(plan[t, i][plan[t, i] >= 0], minlength=10)
+                kept = np.bincount(out[t, i][out[t, i] >= 0], minlength=10)
+                assert (kept <= orig).all()
+
+    def test_rejects_bad_bounds(self):
+        plan = _plan("iid", 0)
+        with pytest.raises(ValueError):
+            quantity_skew(plan, 0, n_min=0)
+        with pytest.raises(ValueError):
+            quantity_skew(plan, 0, n_min=10, n_max=5)
+
+
+class TestComposition:
+    @prop(case=sampled_from(CASES), seed=integers(0, 999))
+    def test_both_transforms_compose_all_cases(self, case, seed):
+        """dropout ∘ quantity_skew over every case: shapes hold, the result
+        is still a well-formed plan (−1-padded int32, labels in range)."""
+        plan = _plan(case, seed)
+        avail = availability_plan(seed, 3, 6, 0.4)
+        out = quantity_skew(apply_availability(plan, avail), seed + 1,
+                            n_min=2, n_max=10)
+        assert out.shape == plan.shape and out.dtype == np.int32
+        assert out.max() < 10 and out.min() >= -1
+        # dark clients stay fully dark through the second transform
+        assert ((out[~avail] == -1).all())
+        # surviving clients keep ≥... quantity skew floors at existing count:
+        alive_counts = (out[avail] >= 0).sum(axis=-1)
+        assert (alive_counts >= 2).all()
