@@ -1,20 +1,19 @@
 """Beyond-paper ablation: selection strategies under Dirichlet(α) label skew —
 the standard FL non-IID benchmark the paper omits — plus the paper's own
-normalization ablation (σ²/n vs raw σ², DESIGN.md §8) and the entropy
-alternative.  Validates that the paper's technique generalizes off its
+normalization ablation (σ²/n vs raw σ², DESIGN.md §8), the entropy
+alternative, and the registry-shipped Dirichlet-posterior uniformity
+criterion.  Validates that the paper's technique generalizes off its
 hand-crafted six cases.
 
-The α axis is the compiled grid's case axis; all five strategies ride the
-lax.switch strategy axis — the full α × strategy × trial block is one jit."""
+The α axis is the spec's scenario axis; all six strategies ride the stacked
+strategy dispatch — the full α × strategy × trial block is one jit."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import dirichlet_plan
-from repro.fl import run_grid
+from repro.fl import ExperimentSpec, ScenarioSpec, run
 from .common import emit, fl_cfg, trials
 
-STRATS = ("random", "labelwise", "labelwise_unnorm", "entropy", "kl")
+STRATS = ("random", "labelwise", "labelwise_unnorm", "entropy", "kl",
+          "dirichlet_uniformity")
 
 
 def main(fast: bool = True) -> dict:
@@ -22,21 +21,24 @@ def main(fast: bool = True) -> dict:
     alphas = (0.1, 0.5) if fast else (0.05, 0.1, 0.5, 1.0, 5.0)
     spc = 48 if fast else 290
     n_trials = trials(fast)
-    plans = np.stack([
-        np.stack([dirichlet_plan(300 + trial, cfg.num_clients, alpha,
-                                 samples_per_client=spc)
-                  for trial in range(n_trials)])
-        for alpha in alphas])                                # (A, R, 1, N, n)
-    res = run_grid(plans, cfg, strategies=STRATS, seeds=range(n_trials))
+    res = run(ExperimentSpec(
+        scenarios=tuple(
+            ScenarioSpec.from_dirichlet(alpha, name=f"a{alpha}", seed0=300,
+                                        per_seed_plans=True,
+                                        samples_per_client=spc)
+            for alpha in alphas),
+        strategies=STRATS, seeds=tuple(range(n_trials)), engine="sim",
+        fl=cfg))
     us_per_round = (res.wall_s + res.compile_s) / (
         len(alphas) * len(STRATS) * n_trials * cfg.global_epochs) * 1e6
 
     rows = {}
-    for i, alpha in enumerate(alphas):
-        for j, strat in enumerate(STRATS):
-            rows[(alpha, strat)] = float(res.accuracy[i, j].mean())
+    for alpha in alphas:
+        for strat in STRATS:
+            mean_acc = float(res.trajectory(f"a{alpha}", strat)["accuracy"].mean())
+            rows[(alpha, strat)] = mean_acc
             emit(f"dirichlet/a{alpha}/{strat}", us_per_round,
-                 f"mean_acc={rows[(alpha, strat)]:.4f}")
+                 f"mean_acc={mean_acc:.4f}")
     return rows
 
 

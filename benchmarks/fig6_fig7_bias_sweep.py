@@ -2,15 +2,13 @@
 probabilities p(x) ∈ {0.7, 0.4, 0.1} (image dataset; the paper used FMNIST &
 CIFAR-10 — synthetic class-conditional images here, DESIGN.md §8).
 
-The p-bias axis is the compiled grid's case axis; the two aggregation kinds
-compile separately (they lower different round bodies) but each covers its
-whole p × strategy × trial block in one program."""
+The p-bias axis is the spec's scenario axis (one ``bias_mix`` ScenarioSpec
+per probability); the two aggregation kinds are two ExperimentSpecs (they
+lower different round bodies) but each covers its whole p × strategy × trial
+block in one compiled program."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import bias_mix_plan
-from repro.fl import run_grid
+from repro.fl import ExperimentSpec, ScenarioSpec, run
 from .common import emit, fl_cfg, trials
 
 P_BIAS = (0.7, 0.4, 0.1)
@@ -26,22 +24,24 @@ def main(fast: bool = True) -> dict:
     n_max = 64 if fast else 270
     n_min = 24 if fast else 30
     n_trials = trials(fast)
-    plans = np.stack([
-        np.stack([bias_mix_plan(100 + trial, cfg.num_clients, p_bias=p,
-                                n_max=n_max, n_min=n_min)
-                  for trial in range(n_trials)])
-        for p in P_BIAS])                                    # (P, R, 1, N, n)
+    scenarios = tuple(
+        ScenarioSpec.from_bias_mix(p, name=f"p{p}", seed0=100,
+                                   per_seed_plans=True, n_min=n_min,
+                                   n_max=n_max)
+        for p in P_BIAS)
 
     rows = {}
     for agg, strats in GRIDS:
-        res = run_grid(plans, cfg, strategies=strats, seeds=range(n_trials),
-                       aggregation=agg)
+        res = run(ExperimentSpec(scenarios=scenarios, strategies=strats,
+                                 seeds=tuple(range(n_trials)), engine="sim",
+                                 fl=cfg, aggregation=agg))
         us_per_round = (res.wall_s + res.compile_s) / (
             len(P_BIAS) * len(strats) * n_trials * cfg.global_epochs) * 1e6
-        for i, p in enumerate(P_BIAS):
-            for j, strat in enumerate(strats):
+        for p in P_BIAS:
+            for strat in strats:
                 name = ALGO_NAME[(agg, strat)]
-                mean_acc = res.accuracy[i, j].mean(axis=-1)  # (R,) conv quality
+                # mean over rounds per trial = convergence quality
+                mean_acc = res.trajectory(f"p{p}", strat)["accuracy"].mean(axis=-1)
                 rows[(p, name)] = (float(mean_acc.mean()), float(mean_acc.std()))
                 emit(f"fig6/p{p}/{name}", us_per_round,
                      f"mean_acc={rows[(p, name)][0]:.4f}±{rows[(p, name)][1]:.4f}")

@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.configs.paper_cnn import FLConfig
 from repro.core import CASES, case_label_plan
-from repro.fl import run_fl_host, run_grid
+from repro.fl import ExperimentSpec, ScenarioSpec, run, run_fl_host
 from .common import emit
 
 STRATEGIES_3 = ("random", "labelwise", "kl")
@@ -60,8 +60,17 @@ def main(fast: bool = True, host_sample: int = 4) -> dict:
     plans = _plans(cfg, n_seeds)
     n_trials = len(CASES) * len(STRATEGIES_3) * n_seeds
 
-    res = run_grid(plans, cfg, strategies=STRATEGIES_3, seeds=range(n_seeds),
-                   eval_n_per_class=EVAL_N)
+    # The declarative surface: seven per-seed case scenarios × 3 strategies ×
+    # seeds, engine="sim" — lowers to exactly the _plans stack above
+    # (tests/test_experiment.py pins that equivalence on a micro grid).
+    res = run(ExperimentSpec(
+        scenarios=tuple(
+            ScenarioSpec.from_case(case, per_seed_plans=True,
+                                   samples_per_client=SPC,
+                                   majority=int(SPC * 200 / 290))
+            for case in CASES),
+        strategies=STRATEGIES_3, seeds=tuple(range(n_seeds)), engine="sim",
+        fl=cfg, eval_n_per_class=EVAL_N))
     sim_total = res.wall_s + res.compile_s
 
     # Host loop on a sampled diagonal of the grid (distinct case/strategy/seed

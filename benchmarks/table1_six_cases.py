@@ -2,40 +2,39 @@
 vs the IID control.  Validates: A-cases train partially (1-A worst among
 per-round-uniform), B-cases collapse toward chance, IID trains fine.
 
-Runs the whole cases × trials grid through the compiled simulation engine
-(repro.fl.sim.run_grid) — one jit, no per-trial re-compiles; each trial gets
-its own plan draw (the paper's per-trial re-partition)."""
+Declared as ONE ExperimentSpec — seven case scenarios × 1 strategy × trials,
+each trial with its own plan draw (``per_seed_plans``, the paper's per-trial
+re-partition) — and run through the compiled engine in a single jit."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import CASES, case_label_plan
-from repro.fl import run_grid
+from repro.core import CASES
+from repro.fl import ExperimentSpec, ScenarioSpec, run
 from .common import emit, fl_cfg, spc, trials
 
 
 def main(fast: bool = True) -> dict:
     cfg = fl_cfg(fast)
     n_trials = trials(fast)
-    plans = np.stack([
-        np.stack([case_label_plan(case, seed=trial, num_rounds=cfg.global_epochs,
-                                  num_clients=cfg.num_clients,
-                                  samples_per_client=spc(fast),
-                                  majority=int(spc(fast) * 200 / 290))
-                  for trial in range(n_trials)])
-        for case in CASES])                                  # (K, R, T, N, n)
-    res = run_grid(plans, cfg, strategies=("random",), seeds=range(n_trials))
+    spec = ExperimentSpec(
+        scenarios=tuple(
+            ScenarioSpec.from_case(case, per_seed_plans=True,
+                                   samples_per_client=spc(fast),
+                                   majority=int(spc(fast) * 200 / 290))
+            for case in CASES),
+        strategies=("random",), seeds=tuple(range(n_trials)), engine="sim",
+        fl=cfg)
+    res = run(spec)
     us_per_round = (res.wall_s + res.compile_s) / (
         len(CASES) * n_trials * cfg.global_epochs) * 1e6
 
+    table = res.table1()
     rows = {}
-    for i, case in enumerate(CASES):
-        final_acc = res.final_accuracy[i, 0]                 # (R,)
-        final_loss = res.loss[i, 0, :, -1]
-        rows[case] = (float(final_acc.mean()), float(final_acc.std()),
-                      float(final_loss.mean()))
+    for case in CASES:
+        cell = table[case]["random"]
+        rows[case] = (cell["acc_mean"], cell["acc_std"], cell["loss_mean"])
         emit(f"table1/{case}", us_per_round,
-             f"acc={rows[case][0]:.4f}±{rows[case][1]:.4f} loss={rows[case][2]:.4f}")
+             f"acc={cell['acc_mean']:.4f}±{cell['acc_std']:.4f} "
+             f"loss={cell['loss_mean']:.4f}")
     return rows
 
 

@@ -7,7 +7,9 @@ from .kl import kl_divergence, kl_to_uniform, uniformity_score
 from .clustering import (cluster_membership, cluster_sizes, area_index,
                          area_counts, num_areas_upper_bound,
                          selection_priority, greedy_area_selection)
-from .selection import (SelectionResult, STRATEGIES, get_strategy,
+from .selection import (SelectionResult, STRATEGIES, BUILTIN_STRATEGIES,
+                        get_strategy, register_strategy, registered_strategies,
+                        strategy_id, topn_mask,
                         select_random, select_labelwise, select_labelwise_unnorm,
                         select_coverage, select_kl, select_entropy, select_full)
 from .noniid import (CASES, case_label_plan, bias_mix_plan, dirichlet_plan,

@@ -2,7 +2,7 @@
 
 Every strategy has the signature
 
-    select(key, hists, n_select) -> SelectionResult(mask, scores)
+    select(key, hists, n_select) -> SelectionResult(mask, scores, order)
 
 with ``hists`` the (N, C) per-client label-histogram matrix for the round.
 ``mask`` is a float32 (N,) 0/1 vector of chosen clients — mask form (rather
@@ -12,18 +12,30 @@ selected clients is mask.sum(); Algorithm 1's "if count < n then n = count"
 degradation (fewer than n clients have σ² ≠ 0) falls out naturally because
 invalid clients are masked to score −∞ *and* masked out of the final mask.
 
-Strategies:
+Built-in strategies:
     random             — FedAvg/FedSGD baseline (uniform without replacement)
     labelwise          — THE PAPER: filter σ²≠0, top-n by σ²(L_i)/n_i (Eq. 3)
     labelwise_unnorm   — ablation: top-n by raw σ²(L_i)
     coverage           — §IV-A area priority A_1 > A_2 > … (σ²/n tie-break)
     kl                 — §IV-C: top-n by −KL(p(L_i) ‖ U) (closest to uniform)
+    entropy            — beyond-paper: Shannon entropy of p(L_i) (scale-free
+                         uniformity; ≈ area priority without the σ² tie-break)
     full               — every client (centralized-equivalent upper baseline)
+
+The strategy universe is OPEN: ``register_strategy(name, fn)`` adds a new
+criterion (e.g. FedClust-style weight clustering scores) that every execution
+engine — host round, compiled simulator, declarative experiment runner —
+dispatches to by name.  Ids are assigned by registration order and are
+append-only (``strategy_id``): re-registering a name keeps its id, new names
+get the next id, nothing ever remaps — saved grid indices stay valid for the
+life of the process and across processes as long as registration order is
+deterministic (register extensions at import time, as
+``repro.fl.experiment`` does).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,23 +51,37 @@ NEG_INF = -1e30
 
 @dataclass
 class SelectionResult:
+    """One round's selection decision.
+
+    ``order`` is the full client permutation sorted by descending priority
+    with invalid clients (empty histogram / failed validity gate) sunk to the
+    end: ``order[:n_select]`` are the clients the server *asks* to train, and
+    ``mask[order[:n_select]]`` tells which of those are actually live — under
+    Algorithm 1's count<n degradation the tail of the asked set is dead
+    (mask 0) rather than replaced.  ``mask.sum()`` is therefore the effective
+    selection count, never the budget."""
     mask: Array    # (N,) float32 ∈ {0, 1}
     scores: Array  # (N,) float32 — the strategy's ranking statistic
-    order: Array   # (N,) int32 — clients sorted by priority (invalid last);
-                   # order[:n] are the clients the server asks to train
+    order: Array   # (N,) int32 — clients by descending priority, invalid last
 
     @property
     def num_selected(self) -> Array:
         return self.mask.sum()
 
 
-def _topn_mask(scores: Array, valid: Array, n_select: int):
-    """(mask, order): 0/1 mask + priority order of the top-n *valid* entries."""
+def topn_mask(scores: Array, valid: Array, n_select: int):
+    """(mask, order): 0/1 mask + priority order of the top-n *valid* entries.
+
+    The building block custom strategies (``register_strategy``) compose with:
+    rank by any (N,) score vector, gate by any (N,) validity predicate."""
     masked = jnp.where(valid, scores, NEG_INF)
     order = jnp.argsort(-masked)  # stable; invalid sink to the end
     ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
     chosen = (ranks < n_select) & valid
     return chosen.astype(jnp.float32), order.astype(jnp.int32)
+
+
+_topn_mask = topn_mask  # pre-registry private name, kept for back-compat
 
 
 def select_random(key: Array, hists: Array, n_select: int) -> SelectionResult:
@@ -119,19 +145,77 @@ def select_full(key: Array, hists: Array, n_select: int) -> SelectionResult:
     return SelectionResult(valid, valid, order)
 
 
-STRATEGIES: Dict[str, Callable[[Array, Array, int], SelectionResult]] = {
-    "random": select_random,
-    "labelwise": select_labelwise,
-    "labelwise_unnorm": select_labelwise_unnorm,
-    "coverage": select_coverage,
-    "kl": select_kl,
-    "entropy": select_entropy,
-    "full": select_full,
-}
+SelectFn = Callable[[Array, Array, int], SelectionResult]
+
+# Name → callable.  Mutated ONLY through register_strategy so the id order
+# below can never drift from the dict contents.
+STRATEGIES: Dict[str, SelectFn] = {}
+
+# Append-only registration order — the stable-id ledger.  Position in this
+# list IS the strategy's integer id (the saved-grid index / lax dispatch
+# index); entries are never removed or reordered.
+_REGISTRY_ORDER: List[str] = []
 
 
-def get_strategy(name: str) -> Callable[[Array, Array, int], SelectionResult]:
+def register_strategy(name: str, fn: SelectFn, *,
+                      overwrite: bool = False) -> SelectFn:
+    """Register a client-selection strategy under ``name``.
+
+    The callable must follow the module contract
+    ``fn(key, hists, n_select) -> SelectionResult`` built from traceable JAX
+    ops only — registered strategies compile directly into the simulation
+    engine's traced stack+index dispatch (repro.fl.sim._select) and the host
+    round, no engine edits required.
+
+    Stable-id contract: a *new* name is appended to the id ledger and gets
+    ``strategy_id(name) == len(registered_strategies()) - 1``; re-registering
+    an existing name (``overwrite=True``) swaps the callable but keeps the id.
+    Ids never remap, so persisted grid indices stay meaningful.  Returns
+    ``fn`` so it can be used as a decorator-style helper.
+    """
+    if not name or not isinstance(name, str):
+        raise ValueError(f"strategy name must be a non-empty str; got {name!r}")
+    if name in STRATEGIES and not overwrite:
+        raise ValueError(
+            f"strategy {name!r} is already registered (id {strategy_id(name)});"
+            " pass overwrite=True to replace its callable (the id is kept)")
+    if not callable(fn):
+        raise TypeError(f"strategy {name!r} must be callable; got {type(fn)}")
+    STRATEGIES[name] = fn
+    if name not in _REGISTRY_ORDER:
+        _REGISTRY_ORDER.append(name)
+    return fn
+
+
+def registered_strategies() -> Tuple[str, ...]:
+    """All strategy names in stable-id order (index == strategy_id)."""
+    return tuple(_REGISTRY_ORDER)
+
+
+def strategy_id(name: str) -> int:
+    """Stable integer id of a selection strategy (its dispatch/grid index)."""
+    try:
+        return _REGISTRY_ORDER.index(name)
+    except ValueError:
+        raise KeyError(f"unknown strategy {name!r}; have "
+                       f"{registered_strategies()}") from None
+
+
+def get_strategy(name: str) -> SelectFn:
     try:
         return STRATEGIES[name]
     except KeyError:
         raise KeyError(f"unknown selection strategy {name!r}; have {sorted(STRATEGIES)}") from None
+
+
+# The paper's universe, registered in the canonical order so ids 0..6 match
+# every grid persisted before the registry existed (the frozen
+# ENGINE_STRATEGIES tuple this replaces) — pinned by tests/test_fl_sim.py.
+BUILTIN_STRATEGIES: Tuple[str, ...] = (
+    "random", "labelwise", "labelwise_unnorm", "coverage", "kl", "entropy",
+    "full")
+for _name, _fn in zip(BUILTIN_STRATEGIES,
+                      (select_random, select_labelwise, select_labelwise_unnorm,
+                       select_coverage, select_kl, select_entropy, select_full)):
+    register_strategy(_name, _fn)
+del _name, _fn

@@ -2,11 +2,33 @@ from .client import local_train, local_gradient
 from .round import make_fl_round
 from .loop import run_fl, run_fl_host, FLHistory, success_rate, cnn_batch_loss
 from .sharded import make_sharded_fl_round, topn_mask_from_scores
-from .sim import (ENGINE_STRATEGIES, GridResult, make_trial_fn, run_grid,
-                  simulate, stack_case_plans, strategy_id)
+from .sim import (GridResult, grid_arrays, make_trial_fn, run_grid, simulate,
+                  stack_case_plans, strategy_id)
+from .experiment import (ExperimentResult, ExperimentSpec, LoweredScenario,
+                         ScenarioSpec, TransformSpec, availability, engines,
+                         quantity, register_engine, register_transform,
+                         registered_transforms, run)
+from repro.core import register_strategy, registered_strategies
 
 __all__ = ["local_train", "local_gradient", "make_fl_round", "run_fl",
            "run_fl_host", "FLHistory", "success_rate", "cnn_batch_loss",
            "make_sharded_fl_round", "topn_mask_from_scores",
-           "ENGINE_STRATEGIES", "GridResult", "make_trial_fn", "run_grid",
-           "simulate", "stack_case_plans", "strategy_id"]
+           "GridResult", "grid_arrays", "make_trial_fn", "run_grid",
+           "simulate", "stack_case_plans", "strategy_id",
+           "ExperimentResult", "ExperimentSpec", "LoweredScenario",
+           "ScenarioSpec", "TransformSpec", "availability", "engines",
+           "quantity", "register_engine", "register_transform",
+           "registered_transforms", "run",
+           "register_strategy", "registered_strategies",
+           # legacy alias served by __getattr__ below; listing it here keeps
+           # `from repro.fl import *` providing it (star-import reads __all__)
+           "ENGINE_STRATEGIES"]
+
+
+def __getattr__(name: str):
+    # Back-compat: the frozen ENGINE_STRATEGIES tuple is now a live view of
+    # the append-only strategy registry (ids 0..6 unchanged, extensions
+    # append).  Prefer registered_strategies().
+    if name == "ENGINE_STRATEGIES":
+        return registered_strategies()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

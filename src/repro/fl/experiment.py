@@ -1,0 +1,764 @@
+"""Declarative experiment API: scenario specs × strategy registry × one
+``run`` surface.
+
+The paper's claims live in grids — six non-IID cases × selection strategies ×
+seeds (§III, Tables I/II) — and before this module every entry point
+(``run_fl``, ``run_fl_host``, ``simulate``, ``run_grid``) re-declared
+overlapping kwargs while scenario transforms were hand-composed at each
+call-site.  Here the whole experiment is DATA:
+
+    spec = ExperimentSpec(
+        scenarios=tuple(ScenarioSpec.from_case(c, per_seed_plans=True)
+                        for c in CASES),
+        strategies=("random", "labelwise", "kl"),
+        seeds=tuple(range(5)),
+        engine="sim")                       # or "host" / "sharded"
+    res = run(spec)                         # one labeled ExperimentResult
+    res.table1(); res.success_rate()        # paper renderers
+    res.to_json()                           # round-trips via from_json
+
+Three orthogonal registries make every axis pluggable without engine edits:
+
+* **strategies** — ``repro.core.selection.register_strategy(name, fn)``; the
+  registered callable compiles straight into the simulator's traced
+  stack+index dispatch (repro.fl.sim._select) and ids are append-only, so
+  saved grid indices never remap.  ``select_dirichlet_uniformity`` below is
+  registered purely through that public API as proof.
+* **transforms** — ``register_transform(kind, fn)``; a ScenarioSpec carries an
+  *ordered* list of TransformSpecs (availability dropout, quantity skew, …)
+  that lower onto the base plan host-side before the arrays enter a device.
+* **engines** — ``register_engine(name, fn)``: "sim" (the compiled vmapped
+  grid, one XLA program), "host" (the legacy per-round loop, the parity
+  oracle), "sharded" (the SPMD pod-scale round; needs a device per client).
+
+``run_fl`` and ``run_grid`` are now thin shims over this surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.paper_cnn import FLConfig
+from repro.core import (CASES, SAMPLES_PER_CLIENT, SelectionResult, STRATEGIES,
+                        apply_availability, availability_plan, bias_mix_plan,
+                        case_label_plan, dirichlet_plan, get_strategy,
+                        quantity_skew, register_strategy, topn_mask)
+
+# ---------------------------------------------------------------------------
+# Transform registry: kind -> lowering fn(plan, avail, seed, **params)
+# ---------------------------------------------------------------------------
+# A lowering consumes the host-side (T, N, n) plan plus the accumulated
+# (T_a, N) availability mask (or None) and returns the transformed pair.
+TransformFn = Callable[..., Tuple[np.ndarray, Optional[np.ndarray]]]
+
+_TRANSFORMS: Dict[str, TransformFn] = {}
+
+
+def register_transform(kind: str, fn: TransformFn, *,
+                       overwrite: bool = False) -> TransformFn:
+    """Register a scenario transform lowering under ``kind``."""
+    if not kind or not isinstance(kind, str):
+        raise ValueError(f"transform kind must be a non-empty str; got {kind!r}")
+    if kind in _TRANSFORMS and not overwrite:
+        raise ValueError(f"transform {kind!r} already registered")
+    if not callable(fn):
+        raise TypeError(f"transform {kind!r} must be callable; got {type(fn)}")
+    _TRANSFORMS[kind] = fn
+    return fn
+
+
+def registered_transforms() -> Tuple[str, ...]:
+    return tuple(_TRANSFORMS)
+
+
+def _lower_availability(plan: np.ndarray, avail: Optional[np.ndarray],
+                        seed: int, *, p_drop: float, min_available: int = 1,
+                        rounds: int, mode: str = "compose"):
+    """Per-round client dropout over the full experiment horizon.
+
+    mode="compose" (default) folds the mask into the plan (dark clients'
+    labels → −1) so every engine sees the same arrays; mode="mask" carries a
+    device-side (T, N) mask instead, which the compiled engine threads into
+    selection (the plan stays intact — identical selected-set semantics,
+    pinned by tests/test_fl_sim.py::test_composed_plan_equivalent)."""
+    mask = availability_plan(seed, rounds, plan.shape[1], p_drop,
+                             min_available=min_available)
+    if mode == "compose":
+        return apply_availability(plan, mask), avail
+    if mode != "mask":
+        raise ValueError(f"availability mode must be 'compose' or 'mask'; "
+                         f"got {mode!r}")
+    m = mask.astype(np.float32)
+    avail = m if avail is None else (avail * m)
+    return plan, avail
+
+
+def _lower_quantity_skew(plan: np.ndarray, avail: Optional[np.ndarray],
+                         seed: int, *, n_min: int = 30,
+                         n_max: Optional[int] = None, rounds: int):
+    del rounds
+    return quantity_skew(plan, seed, n_min=n_min, n_max=n_max), avail
+
+
+register_transform("availability", _lower_availability)
+register_transform("quantity_skew", _lower_quantity_skew)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TransformSpec:
+    """One step of a scenario's ordered transform stack.
+
+    ``params`` may carry an explicit ``seed``; otherwise the transform draws
+    its randomness from the scenario's deterministic seed schedule (seed0 +
+    per-seed offset + a per-position stride), so the same spec always lowers
+    to the same arrays."""
+    kind: str
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "TransformSpec":
+        return cls(kind=d["kind"], params=dict(d.get("params", {})))
+
+
+def availability(p_drop: float, **params: Any) -> TransformSpec:
+    """Sugar: TransformSpec("availability", p_drop=...)."""
+    return TransformSpec("availability", {"p_drop": p_drop, **params})
+
+
+def quantity(n_min: int = 30, n_max: Optional[int] = None,
+             **params: Any) -> TransformSpec:
+    """Sugar: TransformSpec("quantity_skew", n_min=..., n_max=...)."""
+    return TransformSpec("quantity_skew",
+                         {"n_min": n_min, "n_max": n_max, **params})
+
+
+# ---------------------------------------------------------------------------
+# Scenario specs
+# ---------------------------------------------------------------------------
+
+_SOURCES = ("case", "bias_mix", "dirichlet", "plan")
+
+# Stride between consecutive transforms' derived seeds (any prime far from
+# the fold_in constants the engines use keeps the streams disjoint).
+_TRANSFORM_SEED_STRIDE = 7919
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ScenarioSpec:
+    """One data scenario: a plan *source* plus an ordered transform stack.
+
+    Sources:
+        case      — one of the seven §III cases (params: samples_per_client,
+                    majority, num_classes); horizon = the experiment's rounds
+        bias_mix  — Figs. 6–7 partitioner (params: p_bias, n_min, n_max,
+                    num_rounds, num_classes); static (T=1) by default
+        dirichlet — Dirichlet(α) label skew (params: alpha,
+                    samples_per_client, num_classes); static (T=1)
+        plan      — an explicit (T, N, n) int32 array, or (R, T, N, n) for
+                    per-seed draws
+
+    ``per_seed_plans=True`` re-draws the source per experiment seed (the
+    paper's per-trial re-partition): seed s gets ``seed0 + s`` as its source
+    seed, so ``seeds=range(R), seed0=0`` reproduces the benchmarks' historic
+    ``case_label_plan(case, seed=trial)`` stacking exactly.
+    """
+    name: str
+    source: str = "case"
+    case: Optional[str] = None
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    transforms: Tuple[TransformSpec, ...] = ()
+    seed0: int = 0
+    per_seed_plans: bool = False
+    plan: Optional[np.ndarray] = None
+    avail: Optional[np.ndarray] = None
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_case(cls, case: str, *, name: Optional[str] = None,
+                  transforms: Sequence[TransformSpec] = (), seed0: int = 0,
+                  per_seed_plans: bool = False, **params: Any) -> "ScenarioSpec":
+        if case not in CASES:
+            raise ValueError(f"unknown case {case!r}; have {CASES}")
+        return cls(name=name or case, source="case", case=case,
+                   params=dict(params), transforms=tuple(transforms),
+                   seed0=seed0, per_seed_plans=per_seed_plans)
+
+    @classmethod
+    def from_bias_mix(cls, p_bias: float, *, name: Optional[str] = None,
+                      transforms: Sequence[TransformSpec] = (), seed0: int = 0,
+                      per_seed_plans: bool = False, **params: Any) -> "ScenarioSpec":
+        return cls(name=name or f"bias{p_bias}", source="bias_mix",
+                   params={"p_bias": p_bias, **params},
+                   transforms=tuple(transforms), seed0=seed0,
+                   per_seed_plans=per_seed_plans)
+
+    @classmethod
+    def from_dirichlet(cls, alpha: float, *, name: Optional[str] = None,
+                       transforms: Sequence[TransformSpec] = (), seed0: int = 0,
+                       per_seed_plans: bool = False, **params: Any) -> "ScenarioSpec":
+        return cls(name=name or f"dirichlet{alpha}", source="dirichlet",
+                   params={"alpha": alpha, **params},
+                   transforms=tuple(transforms), seed0=seed0,
+                   per_seed_plans=per_seed_plans)
+
+    @classmethod
+    def from_plan(cls, name: str, plan: np.ndarray, *,
+                  avail: Optional[np.ndarray] = None,
+                  transforms: Sequence[TransformSpec] = (),
+                  seed0: int = 0) -> "ScenarioSpec":
+        plan = np.asarray(plan, np.int32)
+        if plan.ndim not in (3, 4):
+            raise ValueError(f"explicit plan must be (T, N, n) or "
+                             f"(R, T, N, n); got {plan.shape}")
+        return cls(name=name, source="plan", plan=plan,
+                   avail=None if avail is None else np.asarray(avail),
+                   transforms=tuple(transforms), seed0=seed0,
+                   per_seed_plans=plan.ndim == 4)
+
+    # -- lowering -----------------------------------------------------------
+    def _base_plan(self, fl_cfg, seed: int, rounds: int) -> np.ndarray:
+        p = self.params
+        if self.source == "case":
+            spc = p.get("samples_per_client", SAMPLES_PER_CLIENT)
+            return case_label_plan(
+                self.case, seed=seed, num_rounds=rounds,
+                num_clients=fl_cfg.num_clients,
+                num_classes=p.get("num_classes", 10), samples_per_client=spc,
+                majority=p.get("majority", int(spc * 200 / 290)))
+        if self.source == "bias_mix":
+            return bias_mix_plan(
+                seed, fl_cfg.num_clients, p_bias=p["p_bias"],
+                num_classes=p.get("num_classes", 10),
+                n_min=p.get("n_min", 30), n_max=p.get("n_max", 270),
+                num_rounds=p.get("num_rounds", 1))
+        if self.source == "dirichlet":
+            return dirichlet_plan(
+                seed, fl_cfg.num_clients, alpha=p["alpha"],
+                num_classes=p.get("num_classes", 10),
+                samples_per_client=p.get("samples_per_client",
+                                         SAMPLES_PER_CLIENT))
+        raise ValueError(f"unknown scenario source {self.source!r}; "
+                         f"have {_SOURCES}")
+
+    def _lower_one(self, fl_cfg, seed_offset: int, rounds: int
+                   ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        if self.source == "plan":
+            plan = np.asarray(self.plan, np.int32)
+            if plan.ndim == 4:
+                plan = plan[seed_offset]
+        else:
+            plan = self._base_plan(fl_cfg, self.seed0 + seed_offset, rounds)
+        avail = (None if self.avail is None
+                 else np.asarray(self.avail, np.float32))
+        for ti, t in enumerate(self.transforms):
+            fn = _TRANSFORMS.get(t.kind)
+            if fn is None:
+                raise KeyError(f"unknown transform {t.kind!r}; have "
+                               f"{registered_transforms()}")
+            params = dict(t.params)
+            seed = params.pop("seed", None)
+            if seed is None:
+                seed = (self.seed0 + seed_offset
+                        + _TRANSFORM_SEED_STRIDE * (ti + 1))
+            plan, avail = fn(plan, avail, seed, rounds=rounds, **params)
+        return plan, avail
+
+    def lower(self, fl_cfg, seeds: Sequence[int], rounds: int
+              ) -> "LoweredScenario":
+        """Materialize the spec into host arrays: (T, N, n) — or
+        (R, T, N, n) when per-seed — plus an optional (T, N) device mask."""
+        if self.per_seed_plans:
+            if self.source == "plan" and self.plan.shape[0] != len(seeds):
+                raise ValueError(
+                    f"scenario {self.name!r}: per-seed plans axis 0 "
+                    f"({self.plan.shape[0]}) must match len(seeds) "
+                    f"({len(seeds)})")
+            pairs = [self._lower_one(fl_cfg, (s if self.source != "plan"
+                                              else i), rounds)
+                     for i, s in enumerate(seeds)]
+            plans = np.stack([p for p, _ in pairs])
+            avails = [a for _, a in pairs]
+            if any(a is not None for a in avails):
+                if any(a is None for a in avails):
+                    raise ValueError(
+                        f"scenario {self.name!r}: mask-mode transforms must "
+                        "apply to every per-seed draw or none")
+                # One (T, N) mask per grid cell is the engine contract;
+                # per-seed masks must agree (use an explicit seed to pin).
+                first = avails[0]
+                for a in avails[1:]:
+                    if not np.array_equal(first, a):
+                        raise ValueError(
+                            f"scenario {self.name!r}: per-seed availability "
+                            "masks diverge; pin them with an explicit "
+                            "transform seed or use mode='compose'")
+                return LoweredScenario(self.name, plans, first, True)
+            return LoweredScenario(self.name, plans, None, True)
+        if self.source == "plan" and np.asarray(self.plan).ndim == 4:
+            raise ValueError(f"scenario {self.name!r}: (R, T, N, n) plans "
+                             "imply per_seed_plans=True")
+        plan, avail = self._lower_one(fl_cfg, 0, rounds)
+        return LoweredScenario(self.name, plan, avail, False)
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name, "source": self.source, "case": self.case,
+            "params": dict(self.params),
+            "transforms": [t.to_dict() for t in self.transforms],
+            "seed0": self.seed0, "per_seed_plans": self.per_seed_plans,
+            "plan": None if self.plan is None else np.asarray(self.plan).tolist(),
+            "avail": None if self.avail is None else np.asarray(self.avail).tolist(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ScenarioSpec":
+        return cls(
+            name=d["name"], source=d.get("source", "case"),
+            case=d.get("case"), params=dict(d.get("params", {})),
+            transforms=tuple(TransformSpec.from_dict(t)
+                             for t in d.get("transforms", ())),
+            seed0=d.get("seed0", 0),
+            per_seed_plans=d.get("per_seed_plans", False),
+            plan=(None if d.get("plan") is None
+                  else np.asarray(d["plan"], np.int32)),
+            avail=(None if d.get("avail") is None
+                   else np.asarray(d["avail"], np.float32)))
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredScenario:
+    """A ScenarioSpec lowered to arrays, ready for any engine."""
+    name: str
+    plan: np.ndarray                      # (T, N, n) or (R, T, N, n)
+    avail: Optional[np.ndarray]           # (T_a, N) float mask or None
+    per_seed: bool
+
+    def composed_plan(self, seed_index: int) -> np.ndarray:
+        """(T, N, n) plan for one grid cell with any device-mask availability
+        folded in — what mask-free engines (host loop) consume."""
+        plan = self.plan[seed_index] if self.per_seed else self.plan
+        if self.avail is not None:
+            plan = apply_availability(plan, self.avail.astype(bool))
+        return plan
+
+
+# ---------------------------------------------------------------------------
+# Experiment spec + result
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExperimentSpec:
+    """The full grid: scenarios × strategies × seeds × aggregation × engine."""
+    scenarios: Tuple[ScenarioSpec, ...]
+    strategies: Tuple[str, ...] = ("labelwise",)
+    seeds: Tuple[int, ...] = (0,)
+    engine: str = "sim"
+    fl: Any = dataclasses.field(default_factory=FLConfig)
+    aggregation: Optional[str] = None
+    rounds: Optional[int] = None
+    eval_n_per_class: int = 50
+
+    @property
+    def num_rounds(self) -> int:
+        return self.fl.global_epochs if self.rounds is None else self.rounds
+
+    def validate(self) -> None:
+        if not self.scenarios:
+            raise ValueError("spec needs at least one scenario")
+        names = [s.name for s in self.scenarios]
+        if len(set(names)) != len(names):
+            raise ValueError(f"scenario names must be unique; got {names}")
+        if not self.strategies:
+            raise ValueError("spec needs at least one strategy")
+        for s in self.strategies:
+            get_strategy(s)          # unknown names raise here, pre-compile
+        if not self.seeds:
+            raise ValueError("spec needs at least one seed")
+        if self.engine not in _ENGINES:
+            raise KeyError(f"unknown engine {self.engine!r}; have "
+                           f"{engines()}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "scenarios": [s.to_dict() for s in self.scenarios],
+            "strategies": list(self.strategies), "seeds": list(self.seeds),
+            "engine": self.engine, "fl": dataclasses.asdict(self.fl),
+            "aggregation": self.aggregation, "rounds": self.rounds,
+            "eval_n_per_class": self.eval_n_per_class,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        return cls(
+            scenarios=tuple(ScenarioSpec.from_dict(s) for s in d["scenarios"]),
+            strategies=tuple(d.get("strategies", ("labelwise",))),
+            seeds=tuple(d.get("seeds", (0,))),
+            engine=d.get("engine", "sim"),
+            fl=FLConfig(**d["fl"]) if "fl" in d else FLConfig(),
+            aggregation=d.get("aggregation"), rounds=d.get("rounds"),
+            eval_n_per_class=d.get("eval_n_per_class", 50))
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """Labeled grid trajectories: axes (scenario, strategy, seed, round)."""
+    scenarios: Tuple[str, ...]
+    strategies: Tuple[str, ...]
+    seeds: Tuple[int, ...]
+    accuracy: np.ndarray        # (K, S, R, T) f32
+    loss: np.ndarray
+    num_selected: np.ndarray
+    engine: str = "sim"
+    wall_s: float = 0.0
+    compile_s: float = 0.0
+
+    AXES = ("scenario", "strategy", "seed", "round")
+
+    def __post_init__(self):
+        want = (len(self.scenarios), len(self.strategies), len(self.seeds))
+        for name in ("accuracy", "loss", "num_selected"):
+            arr = np.asarray(getattr(self, name))
+            if arr.shape[:3] != want:
+                raise ValueError(f"{name} leading axes {arr.shape[:3]} != "
+                                 f"(scenarios, strategies, seeds) {want}")
+            setattr(self, name, arr)
+
+    # -- label-based access -------------------------------------------------
+    def _idx(self, axis_labels: Sequence[Any], label: Any, axis: str) -> int:
+        try:
+            return list(axis_labels).index(label)
+        except ValueError:
+            raise KeyError(f"unknown {axis} {label!r}; have "
+                           f"{tuple(axis_labels)}") from None
+
+    def trajectory(self, scenario: str, strategy: str,
+                   seed: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """The (rounds,) trajectories of one grid cell (or a (R, rounds)
+        block when ``seed`` is omitted)."""
+        k = self._idx(self.scenarios, scenario, "scenario")
+        s = self._idx(self.strategies, strategy, "strategy")
+        sl = (k, s) if seed is None else (k, s, self._idx(self.seeds, seed,
+                                                          "seed"))
+        return {"accuracy": self.accuracy[sl], "loss": self.loss[sl],
+                "num_selected": self.num_selected[sl]}
+
+    @property
+    def final_accuracy(self) -> np.ndarray:
+        return self.accuracy[..., -1]
+
+    def success_rate(self, threshold: float = 0.2) -> np.ndarray:
+        """Paper Table II: fraction of seeds with final accuracy > τ; (K, S)."""
+        return (self.final_accuracy > threshold).mean(axis=-1)
+
+    # -- paper renderers ----------------------------------------------------
+    def table1(self) -> Dict[str, Dict[str, Dict[str, float]]]:
+        """Table-I data: scenario → strategy → final acc mean/std + loss."""
+        out: Dict[str, Dict[str, Dict[str, float]]] = {}
+        for k, sc in enumerate(self.scenarios):
+            out[sc] = {}
+            for s, st in enumerate(self.strategies):
+                fa = self.final_accuracy[k, s]
+                out[sc][st] = {"acc_mean": float(fa.mean()),
+                               "acc_std": float(fa.std()),
+                               "loss_mean": float(self.loss[k, s, :, -1].mean())}
+        return out
+
+    def table2(self, threshold: float = 0.2) -> Dict[str, Dict[str, float]]:
+        """Table-II data: scenario → strategy → train success rate."""
+        sr = self.success_rate(threshold)
+        return {sc: {st: float(sr[k, s])
+                     for s, st in enumerate(self.strategies)}
+                for k, sc in enumerate(self.scenarios)}
+
+    def _render(self, cell: Callable[[int, int], str], title: str) -> str:
+        w = max(10, *(len(s) for s in self.strategies)) + 2
+        head = f"{'scenario':12s}" + "".join(f"{s:>{w}s}"
+                                             for s in self.strategies)
+        rows = [f"# {title}", head]
+        for k, sc in enumerate(self.scenarios):
+            rows.append(f"{sc:12s}" + "".join(f"{cell(k, s):>{w}s}"
+                                              for s in range(len(self.strategies))))
+        return "\n".join(rows)
+
+    def render_table1(self) -> str:
+        fa = self.final_accuracy
+        return self._render(
+            lambda k, s: f"{fa[k, s].mean():.3f}±{fa[k, s].std():.3f}",
+            f"Table I — final accuracy over {len(self.seeds)} seed(s), "
+            f"engine={self.engine}")
+
+    def render_table2(self, threshold: float = 0.2) -> str:
+        sr = self.success_rate(threshold)
+        return self._render(lambda k, s: f"{sr[k, s]:.2f}",
+                            f"Table II — success rate (acc > {threshold})")
+
+    # -- serialization ------------------------------------------------------
+    def to_json(self, **json_kw: Any) -> str:
+        return json.dumps({
+            "axes": list(self.AXES),
+            "scenarios": list(self.scenarios),
+            "strategies": list(self.strategies),
+            "seeds": [int(s) for s in self.seeds],
+            "engine": self.engine,
+            "wall_s": self.wall_s, "compile_s": self.compile_s,
+            "accuracy": self.accuracy.tolist(),
+            "loss": self.loss.tolist(),
+            "num_selected": self.num_selected.tolist(),
+        }, **json_kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentResult":
+        d = json.loads(s)
+        return cls(
+            scenarios=tuple(d["scenarios"]), strategies=tuple(d["strategies"]),
+            seeds=tuple(d["seeds"]),
+            accuracy=np.asarray(d["accuracy"], np.float32),
+            loss=np.asarray(d["loss"], np.float32),
+            num_selected=np.asarray(d["num_selected"], np.float32),
+            engine=d.get("engine", "sim"), wall_s=d.get("wall_s", 0.0),
+            compile_s=d.get("compile_s", 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Engine registry
+# ---------------------------------------------------------------------------
+# An engine consumes (spec, lowered_scenarios, ds) and returns
+# (accuracy, loss, num_selected) arrays shaped (K, S, R, rounds) plus
+# (wall_s, compile_s).
+EngineFn = Callable[..., Tuple[np.ndarray, np.ndarray, np.ndarray, float, float]]
+
+_ENGINES: Dict[str, EngineFn] = {}
+
+
+def register_engine(name: str, fn: EngineFn, *,
+                    overwrite: bool = False) -> EngineFn:
+    """Register an execution engine under ``name`` (see module docstring)."""
+    if not name or not isinstance(name, str):
+        raise ValueError(f"engine name must be a non-empty str; got {name!r}")
+    if name in _ENGINES and not overwrite:
+        raise ValueError(f"engine {name!r} already registered")
+    if not callable(fn):
+        raise TypeError(f"engine {name!r} must be callable; got {type(fn)}")
+    _ENGINES[name] = fn
+    return fn
+
+
+def engines() -> Tuple[str, ...]:
+    return tuple(_ENGINES)
+
+
+def _engine_sim(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
+    """Compiled vmapped grid: the whole experiment is ONE XLA program."""
+    from .sim import grid_arrays
+    shapes = {low.plan.shape[-3:] for low in lowered}
+    if len(shapes) != 1:
+        raise ValueError(
+            "engine='sim' stacks every scenario into one compiled grid, so "
+            "all lowered plans must share (T, N, n); got "
+            f"{ {low.name: low.plan.shape for low in lowered} } — pad plans "
+            "to a common n_max or split into separate specs")
+    per_seed = any(low.per_seed for low in lowered)
+    r = len(spec.seeds)
+
+    def cell(low: LoweredScenario) -> np.ndarray:
+        if low.per_seed:
+            return low.plan
+        if per_seed:        # tile static scenarios onto the per-seed axis
+            return np.broadcast_to(low.plan[None],
+                                   (r,) + low.plan.shape)
+        return low.plan
+
+    plans = np.stack([cell(low) for low in lowered])
+    avail = None
+    if any(low.avail is not None for low in lowered):
+        a_shapes = {low.avail.shape for low in lowered
+                    if low.avail is not None}
+        if len(a_shapes) != 1:
+            raise ValueError("engine='sim' stacks availability masks on the "
+                             f"scenario axis; shapes must agree, got {a_shapes}")
+        (t_a, n_a), = a_shapes
+        avail = np.ones((len(lowered), t_a, n_a), np.float32)
+        for k, low in enumerate(lowered):
+            if low.avail is not None:
+                avail[k] = low.avail
+    res = grid_arrays(plans, spec.fl, strategies=spec.strategies,
+                      seeds=spec.seeds, aggregation=spec.aggregation,
+                      rounds=spec.rounds, ds=ds, avail=avail,
+                      eval_n_per_class=spec.eval_n_per_class)
+    return res.accuracy, res.loss, res.num_selected, res.wall_s, res.compile_s
+
+
+def _engine_host(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
+    """Legacy per-round host loop over every grid cell — the parity oracle."""
+    from .loop import run_fl_host
+    k_n, s_n, r_n = len(lowered), len(spec.strategies), len(spec.seeds)
+    t_n = spec.num_rounds
+    acc = np.zeros((k_n, s_n, r_n, t_n), np.float32)
+    loss = np.zeros_like(acc)
+    nsel = np.zeros_like(acc)
+    t0 = time.perf_counter()
+    for k, low in enumerate(lowered):
+        for r, seed in enumerate(spec.seeds):
+            plan = low.composed_plan(r)
+            for s, strat in enumerate(spec.strategies):
+                h = run_fl_host(plan, spec.fl, strategy=strat,
+                                aggregation=spec.aggregation,
+                                rounds=spec.rounds, ds=ds, seed=seed,
+                                eval_n_per_class=spec.eval_n_per_class)
+                acc[k, s, r] = h.accuracy
+                loss[k, s, r] = h.loss
+                nsel[k, s, r] = h.num_selected
+    return acc, loss, nsel, time.perf_counter() - t0, 0.0
+
+
+def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
+                    ds):
+    """Pod-scale SPMD: each mesh slice along the client axis is one client;
+    selection is an all-gather of σ² scalars, aggregation a masked psum.
+
+    Deployment-shaped constraints: needs ``jax.device_count() >=
+    fl.num_clients`` (one group per client; use
+    ``--xla_force_host_platform_device_count`` to emulate), the ``labelwise``
+    strategy (scores are computed in-shard) and fedavg aggregation."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.data import ImageDataset, client_batches, materialize_round
+    from repro.models import cnn_init, cnn_loss
+    from repro.optim import get_optimizer
+    from .client import local_train
+    from .sharded import make_sharded_fl_round
+
+    if tuple(spec.strategies) != ("labelwise",):
+        raise ValueError(
+            "engine='sharded' computes selection scores in-shard and only "
+            f"supports strategies=('labelwise',); got {spec.strategies}")
+    if (spec.aggregation or spec.fl.aggregation) != "fedavg":
+        raise ValueError("engine='sharded' supports fedavg aggregation only")
+    n_clients = spec.fl.num_clients
+    if jax.device_count() < n_clients:
+        raise RuntimeError(
+            f"engine='sharded' needs one device per client: have "
+            f"{jax.device_count()} devices for {n_clients} clients (emulate "
+            "with XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+
+    ds = ds or ImageDataset()
+    cfg = spec.fl
+    mesh = jax.make_mesh((n_clients,), ("clients",))
+    opt = get_optimizer(cfg.optimizer, cfg.lr)
+    test_x, test_y = ds.test_set(spec.eval_n_per_class)
+    eval_jit = jax.jit(lambda p: cnn_loss(p, test_x, test_y))
+
+    def loss_fn(params, batch):
+        return cnn_loss(params, batch["images"], batch["labels"],
+                        batch["valid"])
+
+    def local_step(params, batch):
+        # per-shard leaves are (1, n_batches, batch, ...): one client group
+        one = jax.tree_util.tree_map(lambda x: x[0], batch)
+        return local_train(params, opt, one, loss_fn, cfg.local_epochs)[0]
+
+    k_n, r_n = len(lowered), len(spec.seeds)
+    t_n = spec.num_rounds
+    acc = np.zeros((k_n, 1, r_n, t_n), np.float32)
+    loss = np.zeros_like(acc)
+    nsel = np.zeros_like(acc)
+    t0 = time.perf_counter()
+    round_fn = None
+    for k, low in enumerate(lowered):
+        for r, seed in enumerate(spec.seeds):
+            plan = low.composed_plan(r)
+            key = jax.random.PRNGKey(int(seed))
+            params = cnn_init(jax.random.fold_in(key, 1),
+                              num_classes=ds.num_classes,
+                              image_size=ds.image_size, channels=ds.channels)
+            if round_fn is None:
+                pspec = jax.tree_util.tree_map(lambda _: P(), params)
+                round_fn = make_sharded_fl_round(
+                    mesh, "clients", local_step,
+                    n_select=cfg.clients_per_round,
+                    num_classes=ds.num_classes, params_pspec=pspec,
+                    batch_pspec={"images": P(), "labels": P(), "valid": P()})
+            for t in range(t_n):
+                kt = jax.random.fold_in(key, 1000 + t)
+                data = materialize_round(ds, plan[t % plan.shape[0]],
+                                         jax.random.fold_in(kt, 0))
+                batches = client_batches(data, cfg.batch_size)
+                params, info = round_fn(params, batches, data["labels"],
+                                        data["valid"])
+                l, m = eval_jit(params)
+                acc[k, 0, r, t] = float(m["accuracy"])
+                loss[k, 0, r, t] = float(l)
+                nsel[k, 0, r, t] = float(info["num_selected"])
+    return acc, loss, nsel, time.perf_counter() - t0, 0.0
+
+
+register_engine("sim", _engine_sim)
+register_engine("host", _engine_host)
+register_engine("sharded", _engine_sharded)
+
+
+# ---------------------------------------------------------------------------
+# The one run surface
+# ---------------------------------------------------------------------------
+
+def run(spec: ExperimentSpec, *, ds=None) -> ExperimentResult:
+    """Execute a declarative experiment spec and return the labeled result.
+
+    Lowers every ScenarioSpec (source + ordered transforms) to arrays once,
+    dispatches through the engine registry, and labels the output axes
+    (scenario, strategy, seed, round)."""
+    spec.validate()
+    lowered = [s.lower(spec.fl, spec.seeds, spec.num_rounds)
+               for s in spec.scenarios]
+    engine = _ENGINES[spec.engine]
+    acc, loss, nsel, wall_s, compile_s = engine(spec, lowered, ds)
+    return ExperimentResult(
+        scenarios=tuple(s.name for s in spec.scenarios),
+        strategies=tuple(spec.strategies), seeds=tuple(spec.seeds),
+        accuracy=np.asarray(acc), loss=np.asarray(loss),
+        num_selected=np.asarray(nsel), engine=spec.engine,
+        wall_s=wall_s, compile_s=compile_s)
+
+
+# ---------------------------------------------------------------------------
+# A beyond-paper strategy registered purely through the public API — proof
+# that the registry reaches the compiled engine without touching sim.py.
+# ---------------------------------------------------------------------------
+
+def select_dirichlet_uniformity(key, hists, n_select) -> SelectionResult:
+    """Dirichlet-posterior expected entropy of p(L_i).
+
+    Treat each client's histogram h as multinomial counts with a uniform
+    Dirichlet(1) prior → posterior Dirichlet(α = h + 1), and rank clients by
+    the posterior-expected Shannon entropy
+
+        E[−Σ_c p_c log p_c] = Σ_c (α_c/α₀)(ψ(α₀+1) − ψ(α_c+1)).
+
+    Unlike the plug-in ``entropy``/``kl`` scores this is sample-size aware:
+    a 3-sample "uniform" histogram shrinks toward the prior and cannot outrank
+    a 300-sample genuinely uniform client, so it trades off §IV-C uniformity
+    against histogram evidence."""
+    del key
+    import jax.numpy as jnp
+    from jax.scipy.special import digamma
+
+    alpha = jnp.asarray(hists, jnp.float32) + 1.0
+    a0 = alpha.sum(-1, keepdims=True)
+    scores = ((alpha / a0) * (digamma(a0 + 1.0) - digamma(alpha + 1.0))).sum(-1)
+    valid = jnp.asarray(hists).sum(axis=-1) > 0
+    mask, order = topn_mask(scores, valid, n_select)
+    return SelectionResult(mask, scores, order)
+
+
+if "dirichlet_uniformity" not in STRATEGIES:
+    register_strategy("dirichlet_uniformity", select_dirichlet_uniformity)

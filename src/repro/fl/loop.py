@@ -1,17 +1,18 @@
 """FL training-loop front-end: ``run_fl`` — rounds × (materialize → select →
-train → aggregate → evaluate).  This is the end-to-end driver the paper's
-experiments (§VI) run on; examples/ and benchmarks/ call into it.
-
-Two execution engines share the same math and randomness:
+train → aggregate → evaluate).  This is the end-to-end single-trial driver;
+it is a thin shim over the declarative experiment surface
+(repro.fl.experiment), with ``engine`` naming a registered runner:
 
 * ``engine="sim"`` (default) — the compiled simulator (repro.fl.sim): the
   round loop is a device-resident lax.scan, one jit for the whole trial.
-* ``engine="host"`` — the legacy per-round host loop, kept as the parity
-  oracle (tests/test_fl_sim.py) and the baseline the BENCH_sim_grid speedup
-  is measured against.
+* ``engine="host"`` — the legacy per-round host loop (``run_fl_host`` below),
+  kept as the parity oracle (tests/test_fl_sim.py) and the baseline the
+  BENCH_sim_grid speedup is measured against.
+* ``engine="sharded"`` — the SPMD pod-scale round (one mesh slice per
+  client; see repro.fl.experiment._engine_sharded for its constraints).
 
-Both use the identical fold_in key tree, so trajectories agree within float
-tolerance.
+All engines use the identical fold_in key tree, so trajectories agree within
+float tolerance.
 """
 from __future__ import annotations
 
@@ -63,24 +64,25 @@ def run_fl(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
            verbose: bool = False, engine: str = "sim",
            avail: Optional[np.ndarray] = None,
            eval_n_per_class: int = 50) -> FLHistory:
-    """Run FL on the paper CNN over a non-IID label plan.  Returns history."""
-    if engine == "host":
-        if avail is not None:
-            raise ValueError("availability masks need engine='sim' "
-                             "(or pre-compose with apply_availability)")
-        return run_fl_host(plan, fl_cfg, strategy=strategy,
-                           aggregation=aggregation, rounds=rounds, ds=ds,
-                           seed=seed, verbose=verbose,
-                           eval_n_per_class=eval_n_per_class)
-    if engine != "sim":
-        raise ValueError(f"unknown engine {engine!r}; have 'sim', 'host'")
-    from . import sim
-    res = sim.simulate(plan, fl_cfg, strategy=strategy, aggregation=aggregation,
-                       rounds=rounds, ds=ds, seed=seed, avail=avail,
-                       eval_n_per_class=eval_n_per_class)
-    hist = FLHistory([float(a) for a in res.accuracy],
-                     [float(l) for l in res.loss],
-                     [float(s) for s in res.num_selected],
+    """Run FL on the paper CNN over a non-IID label plan.  Returns history.
+
+    Thin shim over the declarative surface (repro.fl.experiment): the plan
+    becomes a single explicit-plan ScenarioSpec and ``engine`` picks the
+    runner from the engine registry ("sim" compiled grid, "host" legacy loop,
+    "sharded" SPMD)."""
+    from . import experiment
+    scenario = experiment.ScenarioSpec.from_plan("scenario", plan, avail=avail)
+    spec = experiment.ExperimentSpec(
+        scenarios=(scenario,),
+        strategies=(strategy or fl_cfg.selection,),
+        seeds=(fl_cfg.seed if seed is None else seed,),
+        engine=engine, fl=fl_cfg, aggregation=aggregation, rounds=rounds,
+        eval_n_per_class=eval_n_per_class)
+    res = experiment.run(spec, ds=ds)
+    traj = res.trajectory(scenario.name, spec.strategies[0], spec.seeds[0])
+    hist = FLHistory([float(a) for a in traj["accuracy"]],
+                     [float(l) for l in traj["loss"]],
+                     [float(s) for s in traj["num_selected"]],
                      res.wall_s + res.compile_s)
     if verbose:
         for t, (a, l, s) in enumerate(zip(hist.accuracy, hist.loss,
@@ -97,7 +99,9 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
     """Legacy host-driven loop: one jitted round per step, eval on host."""
     ds = ds or ImageDataset()
     seed = fl_cfg.seed if seed is None else seed
-    rounds = rounds or fl_cfg.global_epochs
+    # `is None`, not falsy-or: rounds=0 is a zero-round dry-run (empty
+    # history), not a request for the full schedule.
+    rounds = fl_cfg.global_epochs if rounds is None else rounds
     key = jax.random.PRNGKey(seed)
     params = cnn_init(jax.random.fold_in(key, 1), num_classes=ds.num_classes,
                       image_size=ds.image_size, channels=ds.channels)

@@ -29,13 +29,13 @@ an unavailable client reports an empty histogram and cannot be selected.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import STRATEGIES
+from repro.core import STRATEGIES, registered_strategies, strategy_id
 from repro.data import ImageDataset, client_batches, materialize_round
 from repro.models import cnn_init, cnn_loss
 from repro.optim import get_optimizer
@@ -44,21 +44,15 @@ from .round import client_update_step
 Array = jax.Array
 PyTree = Any
 
-# Fixed strategy universe — index into this tuple is the batched "strategy"
-# axis.  Explicit literal, append-only: reordering (or deriving the order
-# from a dict/sort) silently remaps saved grid indices.  tests/test_fl_sim.py
-# pins both the ids and set-equality with the STRATEGIES registry.
-ENGINE_STRATEGIES: Tuple[str, ...] = (
-    "random", "labelwise", "labelwise_unnorm", "coverage", "kl", "entropy",
-    "full")
 
-
-def strategy_id(name: str) -> int:
-    """Stable integer id of a selection strategy (the lax.switch branch)."""
-    try:
-        return ENGINE_STRATEGIES.index(name)
-    except ValueError:
-        raise KeyError(f"unknown strategy {name!r}; have {ENGINE_STRATEGIES}") from None
+def __getattr__(name: str):
+    # ENGINE_STRATEGIES (the pre-registry frozen tuple) is now a live view of
+    # the append-only registry (repro.core.selection.register_strategy):
+    # builtin ids 0..6 are unchanged, registered extensions append.  Kept as a
+    # module attribute for back-compat; prefer registered_strategies().
+    if name == "ENGINE_STRATEGIES":
+        return registered_strategies()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -121,17 +115,20 @@ def make_trial_fn(fl_cfg, ds: Optional[ImageDataset] = None, *,
     trial as a pure jit/vmap-able function of device arrays.
 
     plan: (T, N, n_max) int32 (−1 pad); sid: scalar int32 index into
-    ``strategies`` (default: the full ENGINE_STRATEGIES universe);
+    ``strategies`` (default: every registered strategy, in stable-id order);
     seed: scalar int32; avail: (T, N) f32 availability (pass all-ones for
     the no-dropout scenario).  Returns three (rounds,) f32 trajectories.
     """
     ds = ds or ImageDataset()
-    universe = tuple(strategies) if strategies is not None else ENGINE_STRATEGIES
+    universe = (tuple(strategies) if strategies is not None
+                else registered_strategies())
     for name in universe:
         strategy_id(name)  # validate early: unknown names raise here
     agg_kind = aggregation or fl_cfg.aggregation
     n_sel = fl_cfg.clients_per_round
-    num_rounds = rounds or fl_cfg.global_epochs
+    # `is None`, not falsy-or: rounds=0 is a legitimate zero-round dry-run
+    # (empty trajectories), not a request for the full schedule.
+    num_rounds = fl_cfg.global_epochs if rounds is None else rounds
     opt = get_optimizer(fl_cfg.optimizer, fl_cfg.lr)
     test_x, test_y = ds.test_set(eval_n_per_class)
 
@@ -211,12 +208,50 @@ def run_grid(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
              eval_n_per_class: int = 50) -> GridResult:
     """The whole grid — cases × strategies × seeds — as ONE compiled program.
 
+    Thin shim over the declarative experiment surface: the raw plan stack
+    becomes one explicit-plan ScenarioSpec per case and the grid runs through
+    ``repro.fl.experiment.run`` (engine="sim"), which calls back into
+    :func:`grid_arrays` below — the actual compiled primitive.
+
     plans: (K, T, N, n_max) int32 stacked label plans (all cases must share
     T/N/n_max — pad with −1 to the common n_max), or (K, R, T, N, n_max) to
     give every seed its own plan draw (the paper's per-trial re-partition).
     avail: optional (T, N) or (K, T, N) availability masks.  Returns
     trajectories with leading axes (K, len(strategies), len(seeds)).
     """
+    from . import experiment
+    plans = np.asarray(plans)
+    seeds = list(seeds)
+    if plans.ndim not in (4, 5):
+        raise ValueError(f"plans must be (K[, R], T, N, n); got {plans.shape}")
+    if avail is not None:
+        avail = np.asarray(avail)
+        if avail.ndim == 2:
+            avail = np.broadcast_to(avail[None],
+                                    (plans.shape[0],) + avail.shape)
+    scenarios = tuple(
+        experiment.ScenarioSpec.from_plan(
+            f"case{k}", plans[k],
+            avail=None if avail is None else avail[k])
+        for k in range(plans.shape[0]))
+    spec = experiment.ExperimentSpec(
+        scenarios=scenarios, strategies=tuple(strategies), seeds=tuple(seeds),
+        engine="sim", fl=fl_cfg, aggregation=aggregation, rounds=rounds,
+        eval_n_per_class=eval_n_per_class)
+    res = experiment.run(spec, ds=ds)
+    return GridResult(res.accuracy, res.loss, res.num_selected,
+                      wall_s=res.wall_s, compile_s=res.compile_s)
+
+
+def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
+                seeds: Sequence[int], aggregation: Optional[str] = None,
+                rounds: Optional[int] = None,
+                ds: Optional[ImageDataset] = None,
+                avail: Optional[np.ndarray] = None,
+                eval_n_per_class: int = 50) -> GridResult:
+    """Compiled grid primitive on raw device arrays (the "sim" engine body):
+    vmap(trial) over seeds × strategies × cases, one lower+compile+launch.
+    Prefer ``run_grid`` / ``experiment.run`` — this is their backend."""
     import time
     plans = np.asarray(plans)
     seeds = list(seeds)          # consume a one-shot iterable exactly once
@@ -266,7 +301,7 @@ def stack_case_plans(cases: Sequence[str], fl_cfg, *, seed0: int = 0,
     from repro.core import case_label_plan, SAMPLES_PER_CLIENT
     spc = samples_per_client or SAMPLES_PER_CLIENT
     maj = majority if majority is not None else int(spc * 200 / 290)
-    t = rounds or fl_cfg.global_epochs
+    t = fl_cfg.global_epochs if rounds is None else rounds
     return np.stack([
         case_label_plan(c, seed=seed0, num_rounds=t,
                         num_clients=fl_cfg.num_clients, num_classes=num_classes,

@@ -1,0 +1,339 @@
+"""Declarative experiment API tests: strategy/transform/engine registries,
+scenario lowering, labeled results, and spec↔engine parity pins.
+
+The slow tier pins the acceptance contract: a spec-built Table-I grid is
+array-identical to the hand-stacked ``run_grid`` path, and transform stacks
+composed through ``run_grid`` agree with the host-loop oracle.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import FLConfig
+from repro.core import (CASES, STRATEGIES, SelectionResult, apply_availability,
+                        availability_plan, case_label_plan, quantity_skew,
+                        register_strategy, registered_strategies, strategy_id,
+                        topn_mask)
+from repro.fl import (ExperimentResult, ExperimentSpec, ScenarioSpec,
+                      TransformSpec, availability, engines, quantity,
+                      register_engine, registered_transforms, run, run_fl_host,
+                      run_grid)
+
+MICRO = FLConfig(num_clients=6, clients_per_round=2, global_epochs=2,
+                 local_epochs=1, batch_size=8, lr=1e-3)
+
+
+def micro_plan(case="iid", seed=3, rounds=2, clients=6, spc=8):
+    return case_label_plan(case, seed=seed, num_rounds=rounds,
+                           num_clients=clients, samples_per_client=spc,
+                           majority=int(spc * 200 / 290))
+
+
+def select_first_valid(key, hists, n_select) -> SelectionResult:
+    """Test strategy: deterministically prefer the lowest client index."""
+    import jax.numpy as jnp
+    del key
+    scores = -jnp.arange(hists.shape[0], dtype=jnp.float32)
+    mask, order = topn_mask(scores, hists.sum(axis=-1) > 0, n_select)
+    return SelectionResult(mask, scores, order)
+
+
+class TestStrategyRegistry:
+    def test_register_appends_stable_ids(self):
+        before = registered_strategies()
+        register_strategy("_test_append", select_first_valid, overwrite=True)
+        after = registered_strategies()
+        assert after[:len(before)] == before or "_test_append" in before
+        assert strategy_id("_test_append") == after.index("_test_append")
+        # overwrite swaps the callable but keeps the id
+        sid = strategy_id("_test_append")
+        register_strategy("_test_append", select_first_valid, overwrite=True)
+        assert strategy_id("_test_append") == sid
+        assert STRATEGIES["_test_append"] is select_first_valid
+
+    def test_duplicate_without_overwrite_raises(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_strategy("random", select_first_valid)
+
+    def test_bad_registrations_raise(self):
+        with pytest.raises(ValueError):
+            register_strategy("", select_first_valid)
+        with pytest.raises(TypeError):
+            register_strategy("_test_notcallable", "nope")
+
+
+class TestScenarioLowering:
+    def test_case_source_shapes_and_determinism(self):
+        s = ScenarioSpec.from_case("case1b", samples_per_client=8)
+        low1 = s.lower(MICRO, (0,), rounds=3)
+        low2 = s.lower(MICRO, (0,), rounds=3)
+        assert low1.plan.shape == (3, 6, 8) and not low1.per_seed
+        np.testing.assert_array_equal(low1.plan, low2.plan)
+        # matches the raw partitioner with the same seed
+        np.testing.assert_array_equal(
+            low1.plan, micro_plan("case1b", seed=0, rounds=3))
+
+    def test_per_seed_plans_match_historic_stacking(self):
+        s = ScenarioSpec.from_case("case2a", per_seed_plans=True,
+                                   samples_per_client=8)
+        low = s.lower(MICRO, (0, 1, 2), rounds=2)
+        assert low.per_seed and low.plan.shape == (3, 2, 6, 8)
+        for r in range(3):
+            np.testing.assert_array_equal(
+                low.plan[r], micro_plan("case2a", seed=r))
+
+    def test_transform_stack_applies_in_order(self):
+        s = ScenarioSpec.from_case(
+            "iid", samples_per_client=8,
+            transforms=(availability(0.5, seed=7),
+                        quantity(n_min=2, n_max=6, seed=8)))
+        low = s.lower(MICRO, (0,), rounds=4)
+        manual = quantity_skew(
+            apply_availability(micro_plan("iid", seed=0, rounds=4),
+                               availability_plan(7, 4, 6, 0.5)),
+            8, n_min=2, n_max=6)
+        np.testing.assert_array_equal(low.plan, manual)
+
+    def test_mask_mode_keeps_plan_and_carries_avail(self):
+        s = ScenarioSpec.from_case(
+            "iid", samples_per_client=8,
+            transforms=(availability(0.5, seed=7, mode="mask"),))
+        low = s.lower(MICRO, (0,), rounds=4)
+        np.testing.assert_array_equal(low.plan, micro_plan("iid", seed=0,
+                                                           rounds=4))
+        np.testing.assert_array_equal(
+            low.avail, availability_plan(7, 4, 6, 0.5).astype(np.float32))
+
+    def test_explicit_plan_and_errors(self):
+        plan4 = np.stack([micro_plan(seed=0), micro_plan(seed=1)])
+        s = ScenarioSpec.from_plan("x", plan4)
+        assert s.per_seed_plans
+        low = s.lower(MICRO, (0, 1), rounds=2)
+        np.testing.assert_array_equal(low.plan, plan4)
+        # per-seed draws must match the seed axis — never silently truncate
+        with pytest.raises(ValueError, match="must match len\\(seeds\\)"):
+            s.lower(MICRO, (0,), rounds=2)
+        with pytest.raises(ValueError, match="must match len\\(seeds\\)"):
+            s.lower(MICRO, (0, 1, 2), rounds=2)
+        with pytest.raises(ValueError, match="\\(T, N, n\\)"):
+            ScenarioSpec.from_plan("x", np.zeros((3, 4), np.int32))
+        with pytest.raises(ValueError, match="unknown case"):
+            ScenarioSpec.from_case("case9z")
+        bad = ScenarioSpec(name="b", source="case", case="iid",
+                           transforms=(TransformSpec("nope"),))
+        with pytest.raises(KeyError, match="unknown transform"):
+            bad.lower(MICRO, (0,), rounds=2)
+
+    def test_transforms_registered(self):
+        assert {"availability", "quantity_skew"} <= set(registered_transforms())
+
+
+class TestSpecValidation:
+    def test_validate_catches_bad_specs(self):
+        scen = (ScenarioSpec.from_case("iid"),)
+        with pytest.raises(ValueError, match="at least one scenario"):
+            ExperimentSpec(scenarios=()).validate()
+        with pytest.raises(ValueError, match="unique"):
+            ExperimentSpec(scenarios=(ScenarioSpec.from_case("iid"),
+                                      ScenarioSpec.from_case("iid"))).validate()
+        with pytest.raises(KeyError, match="unknown selection strategy"):
+            ExperimentSpec(scenarios=scen, strategies=("nope",)).validate()
+        with pytest.raises(KeyError, match="unknown engine"):
+            ExperimentSpec(scenarios=scen, engine="warp").validate()
+        assert {"sim", "host", "sharded"} <= set(engines())
+        with pytest.raises(ValueError, match="already registered"):
+            register_engine("sim", lambda *a: None)
+
+    def test_spec_dict_roundtrip(self):
+        spec = ExperimentSpec(
+            scenarios=(ScenarioSpec.from_case(
+                "case3b", per_seed_plans=True, seed0=5, samples_per_client=8,
+                transforms=(quantity(n_min=2, n_max=6),)),
+                       ScenarioSpec.from_dirichlet(0.3, name="d")),
+            strategies=("random", "kl"), seeds=(0, 4), engine="host",
+            fl=MICRO, aggregation="fedsgd", rounds=3, eval_n_per_class=2)
+        spec2 = ExperimentSpec.from_dict(
+            json.loads(json.dumps(spec.to_dict())))
+        assert spec2.to_dict() == spec.to_dict()
+        assert spec2.fl == MICRO and spec2.rounds == 3
+        low1 = spec.scenarios[0].lower(MICRO, spec.seeds, 3)
+        low2 = spec2.scenarios[0].lower(MICRO, spec2.seeds, 3)
+        np.testing.assert_array_equal(low1.plan, low2.plan)
+
+    def test_result_json_roundtrip(self):
+        rng = np.random.default_rng(0)
+        res = ExperimentResult(
+            scenarios=("a", "b"), strategies=("s1",), seeds=(0, 1, 2),
+            accuracy=rng.random((2, 1, 3, 4)).astype(np.float32),
+            loss=rng.random((2, 1, 3, 4)).astype(np.float32),
+            num_selected=rng.random((2, 1, 3, 4)).astype(np.float32),
+            engine="sim", wall_s=1.5, compile_s=0.5)
+        back = ExperimentResult.from_json(res.to_json())
+        np.testing.assert_array_equal(back.accuracy, res.accuracy)
+        np.testing.assert_array_equal(back.num_selected, res.num_selected)
+        assert back.scenarios == res.scenarios and back.engine == "sim"
+        assert back.success_rate().shape == (2, 1)
+        with pytest.raises(ValueError, match="leading axes"):
+            ExperimentResult(scenarios=("a",), strategies=("s",), seeds=(0,),
+                             accuracy=np.zeros((2, 1, 1, 3)),
+                             loss=np.zeros((2, 1, 1, 3)),
+                             num_selected=np.zeros((2, 1, 1, 3)))
+
+
+class TestDryRun:
+    def test_rounds_zero_is_empty_not_full_schedule(self):
+        """rounds=0 must not fall back to fl_cfg.global_epochs (the old
+        falsy-or bug silently ran the full schedule)."""
+        from repro.fl import simulate, stack_case_plans
+        plan = micro_plan()
+        r = simulate(plan, MICRO, strategy="random", rounds=0,
+                     eval_n_per_class=2)
+        assert r.accuracy.shape == (0,)
+        h = run_fl_host(plan, MICRO, strategy="random", rounds=0,
+                        eval_n_per_class=2)
+        assert h.accuracy == [] and h.num_selected == []
+        assert stack_case_plans(["iid"], MICRO, rounds=0,
+                                samples_per_client=8).shape[1] == 0
+
+
+class TestRunSurface:
+    def test_micro_grid_labeled_axes_and_registered_strategy(self):
+        """One compiled micro grid exercises: scenario sources + transform
+        stack, the registry-shipped dirichlet_uniformity strategy AND a
+        custom strategy registered in this test file — all through the
+        compiled engine without touching sim.py — plus renderers and JSON."""
+        register_strategy("first_valid", select_first_valid, overwrite=True)
+        spec = ExperimentSpec(
+            scenarios=(ScenarioSpec.from_case("iid", samples_per_client=8),
+                       ScenarioSpec.from_case(
+                           "case1b", samples_per_client=8,
+                           transforms=(quantity(n_min=4, n_max=8),))),
+            strategies=("random", "dirichlet_uniformity", "first_valid"),
+            seeds=(0, 1), engine="sim", fl=MICRO, eval_n_per_class=2)
+        res = run(spec)
+        assert res.scenarios == ("iid", "case1b")
+        assert res.strategies == ("random", "dirichlet_uniformity",
+                                  "first_valid")
+        assert res.accuracy.shape == (2, 3, 2, 2)
+        assert np.isfinite(res.loss).all()
+        # custom deterministic strategy fills the budget on IID data
+        assert (res.trajectory("iid", "first_valid")["num_selected"]
+                == MICRO.clients_per_round).all()
+        traj = res.trajectory("case1b", "random", seed=1)
+        assert traj["accuracy"].shape == (2,)
+        with pytest.raises(KeyError, match="unknown scenario"):
+            res.trajectory("nope", "random")
+        t1, t2 = res.table1(), res.table2()
+        assert set(t1) == {"iid", "case1b"}
+        assert 0.0 <= t2["iid"]["random"] <= 1.0
+        assert "Table I" in res.render_table1()
+        assert "Table II" in res.render_table2()
+        back = ExperimentResult.from_json(res.to_json())
+        np.testing.assert_array_equal(back.accuracy, res.accuracy)
+
+
+@pytest.mark.slow
+class TestSpecGridParity:
+    def test_table1_grid_spec_identical_to_run_grid(self):
+        """Acceptance pin: the 7-case × 3-strategy × 5-seed Table-I grid
+        declared as an ExperimentSpec is ARRAY-IDENTICAL to the hand-stacked
+        run_grid path (micro trial sizes keep the compile tractable)."""
+        cfg = FLConfig(num_clients=8, clients_per_round=2, global_epochs=2,
+                       local_epochs=1, batch_size=2, lr=1e-3)
+        spc, n_seeds = 2, 5
+        strategies = ("random", "labelwise", "kl")
+        plans = np.stack([
+            np.stack([case_label_plan(case, seed=s, num_rounds=2,
+                                      num_clients=8, samples_per_client=spc,
+                                      majority=int(spc * 200 / 290))
+                      for s in range(n_seeds)])
+            for case in CASES])                          # (7, 5, T, N, n)
+        grid = run_grid(plans, cfg, strategies=strategies,
+                        seeds=range(n_seeds), eval_n_per_class=1)
+        res = run(ExperimentSpec(
+            scenarios=tuple(
+                ScenarioSpec.from_case(c, per_seed_plans=True,
+                                       samples_per_client=spc,
+                                       majority=int(spc * 200 / 290))
+                for c in CASES),
+            strategies=strategies, seeds=tuple(range(n_seeds)), engine="sim",
+            fl=cfg, eval_n_per_class=1))
+        assert res.scenarios == CASES
+        assert res.accuracy.shape == (7, 3, 5, 2)
+        np.testing.assert_array_equal(res.accuracy, grid.accuracy)
+        np.testing.assert_array_equal(res.loss, grid.loss)
+        np.testing.assert_array_equal(res.num_selected, grid.num_selected)
+
+    def test_transform_composition_run_grid_vs_host(self):
+        """Satellite: quantity_skew + availability composed onto per-seed
+        (K, R, T, N, n) plans, run through the compiled grid, pinned cell by
+        cell against the host loop."""
+        cfg = FLConfig(num_clients=6, clients_per_round=3, global_epochs=2,
+                       local_epochs=1, batch_size=8, lr=1e-3)
+        cases, seeds = ("case2b", "iid"), (0, 1)
+        avail = availability_plan(11, 2, 6, p_drop=0.4)
+        plans = np.stack([
+            np.stack([
+                quantity_skew(
+                    apply_availability(
+                        micro_plan(c, seed=10 * r + 1, spc=12), avail),
+                    seed=5 * r + 2, n_min=3, n_max=10)
+                for r in seeds])
+            for c in cases])                             # (2, 2, T, N, n)
+        grid = run_grid(plans, cfg, strategies=("labelwise",), seeds=seeds,
+                        eval_n_per_class=2)
+        assert grid.accuracy.shape == (2, 1, 2, 2)
+        for k in range(2):
+            for r in seeds:
+                h = run_fl_host(plans[k, r], cfg, strategy="labelwise",
+                                seed=r, eval_n_per_class=2)
+                np.testing.assert_allclose(grid.loss[k, 0, r], h.loss,
+                                           rtol=2e-4, atol=2e-5,
+                                           err_msg=f"cell {cases[k]}/seed{r}")
+                np.testing.assert_array_equal(grid.num_selected[k, 0, r],
+                                              h.num_selected)
+
+
+@pytest.mark.slow
+class TestShardedEngine:
+    def test_sharded_engine_matches_sim_selection(self):
+        """engine='sharded' (one emulated device per client) agrees with the
+        compiled engine on selection counts and trains to finite loss.  Runs
+        in a subprocess: the device count must be forced before jax init."""
+        script = textwrap.dedent("""
+            import numpy as np
+            from repro.configs.paper_cnn import FLConfig
+            from repro.fl import ExperimentSpec, ScenarioSpec, run
+            cfg = FLConfig(num_clients=6, clients_per_round=2,
+                           global_epochs=2, local_epochs=1, batch_size=8,
+                           lr=1e-3)
+            scen = (ScenarioSpec.from_case("case1b", samples_per_client=8),)
+            base = dict(scenarios=scen, strategies=("labelwise",), seeds=(0,),
+                        fl=cfg, eval_n_per_class=2)
+            sh = run(ExperimentSpec(engine="sharded", **base))
+            sim = run(ExperimentSpec(engine="sim", **base))
+            np.testing.assert_array_equal(sh.num_selected, sim.num_selected)
+            assert np.isfinite(sh.loss).all()
+            assert sh.scenarios == sim.scenarios == ("case1b",)
+            print("SHARDED_OK")
+        """)
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=6",
+                   PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+        proc = subprocess.run([sys.executable, "-c", script], env=env,
+                              capture_output=True, text=True, timeout=540,
+                              cwd=os.path.dirname(os.path.dirname(__file__)))
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        assert "SHARDED_OK" in proc.stdout
+
+    def test_sharded_engine_guards(self):
+        spec = ExperimentSpec(
+            scenarios=(ScenarioSpec.from_case("iid"),),
+            strategies=("random",), engine="sharded", fl=MICRO)
+        with pytest.raises(ValueError, match="labelwise"):
+            run(spec)

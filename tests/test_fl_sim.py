@@ -12,7 +12,7 @@ import pytest
 from repro.configs.paper_cnn import FLConfig
 from repro.core import (CASES, apply_availability, availability_plan,
                         case_label_plan, quantity_skew)
-from repro.fl import (ENGINE_STRATEGIES, run_fl, run_fl_host, run_grid,
+from repro.fl import (registered_strategies, run_fl, run_fl_host, run_grid,
                       simulate, stack_case_plans, strategy_id)
 
 MICRO = FLConfig(num_clients=8, clients_per_round=3, global_epochs=3,
@@ -48,14 +48,22 @@ class TestEngineParity:
         assert len(h.loss) == 3 and h.wall_s > 0
 
     def test_strategy_ids_stable(self):
-        from repro.core import STRATEGIES
-        # Pinned ids: saved grids index by these — append-only, never reorder.
-        assert ENGINE_STRATEGIES == ("random", "labelwise", "labelwise_unnorm",
-                                     "coverage", "kl", "entropy", "full")
-        # Registry drift guard: every registered strategy is reachable.
-        assert set(ENGINE_STRATEGIES) == set(STRATEGIES)
-        for i, name in enumerate(ENGINE_STRATEGIES):
+        import repro.fl as fl
+        from repro.core import BUILTIN_STRATEGIES, STRATEGIES
+        # Pinned builtin ids 0..6: saved grids index by these — the registry
+        # is append-only, so extensions may follow but never reorder.
+        builtins = ("random", "labelwise", "labelwise_unnorm", "coverage",
+                    "kl", "entropy", "full")
+        assert BUILTIN_STRATEGIES == builtins
+        assert registered_strategies()[:len(builtins)] == builtins
+        # Registry drift guard: the id ledger and the dispatch dict agree.
+        assert set(registered_strategies()) == set(STRATEGIES)
+        for i, name in enumerate(registered_strategies()):
             assert strategy_id(name) == i
+        # importing repro.fl registers the experiment module's extension
+        assert "dirichlet_uniformity" in registered_strategies()
+        # back-compat: the legacy tuple name is a live registry view
+        assert fl.ENGINE_STRATEGIES == registered_strategies()
         with pytest.raises(KeyError):
             strategy_id("nope")
 
