@@ -22,6 +22,7 @@ SUITES = [
     ("fig10_table2_proportion", "benchmarks.fig10_table2_proportion"),
     ("dirichlet_ablation", "benchmarks.dirichlet_ablation"),
     ("sim_grid", "benchmarks.sim_grid"),
+    ("sharded_round", "benchmarks.sharded_round"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
 
@@ -33,9 +34,15 @@ def main(argv=None) -> int:
     ap.add_argument("--sim-grid", action="store_true",
                     help="only run the compiled-engine vs host-loop grid "
                          "comparison and emit BENCH_sim_grid.json")
+    ap.add_argument("--sharded-round", action="store_true",
+                    help="only run the gather-based vs masked-psum SPMD "
+                         "round comparison (8/16/32 emulated devices) and "
+                         "emit BENCH_sharded_round.json")
     args = ap.parse_args(argv)
     if args.sim_grid:
         args.only = "sim_grid"
+    if args.sharded_round:
+        args.only = "sharded_round"
     if args.only and args.only not in {n for n, _ in SUITES}:
         ap.error(f"unknown suite {args.only!r}; have "
                  f"{sorted(n for n, _ in SUITES)}")

@@ -9,7 +9,7 @@ from .clustering import (cluster_membership, cluster_sizes, area_index,
                          selection_priority, greedy_area_selection)
 from .selection import (SelectionResult, STRATEGIES, BUILTIN_STRATEGIES,
                         get_strategy, register_strategy, registered_strategies,
-                        strategy_id, topn_mask,
+                        selection_budget, strategy_id, topn_mask,
                         select_random, select_labelwise, select_labelwise_unnorm,
                         select_coverage, select_kl, select_entropy, select_full)
 from .noniid import (CASES, case_label_plan, bias_mix_plan, dirichlet_plan,
@@ -17,6 +17,7 @@ from .noniid import (CASES, case_label_plan, bias_mix_plan, dirichlet_plan,
                      quantity_skew, SAMPLES_PER_CLIENT, MAJORITY_PER_CLIENT,
                      MINORITY_PER_CLIENT)
 from .aggregation import (masked_mean, fedavg_aggregate, fedsgd_aggregate,
-                          interpolate, psum_aggregate, all_gather_scores)
+                          interpolate, psum_aggregate, all_gather_scores,
+                          gather_client_shards, psum_weighted_mean)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -63,6 +63,14 @@ def interpolate(global_params: PyTree, aggregated: PyTree, server_lr: float = 1.
 
 # ---------------------------------------------------------------------------
 # SPMD (shard_map) forms — client axis is a mesh axis, typically "pod".
+#
+# Two collective regimes:
+#   * masked psum (psum_aggregate): every shard computes, the mask zeroes
+#     unselected contributions — mask sparsity, full FLOPs.
+#   * gather/scatter (gather_client_shards + psum_weighted_mean): shards first
+#     gather the SELECTED clients' batch shards, train only those, then
+#     scatter the weighted delta back through a psum pair — the gather-based
+#     round's collectives; training FLOPs scale with the selection budget.
 # ---------------------------------------------------------------------------
 
 def psum_aggregate(params: PyTree, my_mask: Array, axis_name: str,
@@ -90,3 +98,37 @@ def all_gather_scores(score: Array, axis_name: str) -> Array:
     """Gather every client group's selection statistic (a scalar) — the cheap
     server step of Algorithm 1 (N scalars, not N models)."""
     return jax.lax.all_gather(score, axis_name)
+
+
+def gather_client_shards(tree: PyTree, axis_name: str) -> PyTree:
+    """Tiled all-gather of every leaf's client-sharded leading axis: per-shard
+    (C, ...) blocks → the full (N, ...) array replicated on every shard.
+
+    The gather half of the gather-based FL round: once every shard holds the
+    full round batch it can index out exactly the selected clients'
+    ``order[:budget]`` slots and train only those.  Costs one extra copy of
+    the round's *batch bytes* on the interconnect; buys skipping
+    ``(N − budget)/N`` of the round's *training FLOPs* — training dominates
+    for any non-trivial local_epochs, and batch bytes ≪ model bytes for the
+    paper's workloads."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.all_gather(x, axis_name, tiled=True), tree)
+
+
+def psum_weighted_mean(tree: PyTree, weights: Array, axis_name: str) -> PyTree:
+    """Weighted mean over every shard's local training slots — the scatter
+    half of the gather-based round, fused with the server broadcast.
+
+    Each shard holds leaves stacked ``(S, ...)`` (its S gathered clients'
+    deltas) and per-slot weights ``(S,)`` (live mask × n_i); the result is
+    ``Σ_shards Σ_s w·x / Σ w`` replicated everywhere.  The reduction runs in
+    each leaf's own dtype — a bf16 delta tree halves the cross-client
+    all-reduce bytes (§Perf FL-round lever) — and the mean is finished in
+    f32.  An all-zero weight vector (Algorithm 1's count=0 degradation)
+    yields an exact zero mean via the ε denominator."""
+    w = weights.astype(jnp.float32)
+    denom = jnp.maximum(jax.lax.psum(w.sum(), axis_name), 1e-12)
+    return jax.tree_util.tree_map(
+        lambda x: (jax.lax.psum((_bcast(w, x) * x).sum(axis=0), axis_name)
+                   .astype(jnp.float32) / denom),
+        tree)

@@ -2,15 +2,20 @@
 
 Every strategy has the signature
 
-    select(key, hists, n_select) -> SelectionResult(mask, scores, order)
+    select(key, hists, n_select) -> SelectionResult(mask, scores, order, budget)
 
 with ``hists`` the (N, C) per-client label-histogram matrix for the round.
-``mask`` is a float32 (N,) 0/1 vector of chosen clients — mask form (rather
-than gather indices) is what the sharded FL round needs: aggregation is a
-masked psum and SPMD shards cannot branch per-client.  The effective number of
-selected clients is mask.sum(); Algorithm 1's "if count < n then n = count"
-degradation (fewer than n clients have σ² ≠ 0) falls out naturally because
-invalid clients are masked to score −∞ *and* masked out of the final mask.
+``mask`` is a float32 (N,) 0/1 vector of chosen clients and ``budget`` is the
+STATIC (Python int) number of training slots the strategy asks for — every
+execution engine gathers exactly ``order[:budget]`` clients into local
+training, so unselected clients spend zero FLOPs (host round, compiled
+simulator, and the gather-based SPMD sharded round all honour it).  The
+effective number of selected clients is mask.sum(); Algorithm 1's "if count <
+n then n = count" degradation (fewer than n clients have σ² ≠ 0) falls out
+naturally because invalid clients are masked to score −∞ *and* masked out of
+the final mask — the tail of the gathered window is dead (mask 0), never
+replaced.  Engines assert ``num_selected == mask.sum()``: a mask may never
+select a client outside its declared budget window.
 
 Built-in strategies:
     random             — FedAvg/FedSGD baseline (uniform without replacement)
@@ -55,30 +60,67 @@ class SelectionResult:
 
     ``order`` is the full client permutation sorted by descending priority
     with invalid clients (empty histogram / failed validity gate) sunk to the
-    end: ``order[:n_select]`` are the clients the server *asks* to train, and
-    ``mask[order[:n_select]]`` tells which of those are actually live — under
+    end: ``order[:budget]`` are the clients the server *asks* to train, and
+    ``mask[order[:budget]]`` tells which of those are actually live — under
     Algorithm 1's count<n degradation the tail of the asked set is dead
     (mask 0) rather than replaced.  ``mask.sum()`` is therefore the effective
-    selection count, never the budget."""
+    selection count, never the budget.
+
+    ``budget`` is the strategy's STATIC training-slot count — a Python int
+    known at trace time (shapes are static; ``n_select`` is an int by
+    contract), NOT a traced array.  It is the width of the ``order`` prefix
+    every engine gathers into local training, so it bounds the round's
+    training FLOPs.  ``None`` means "engine default" (``clients_per_round``),
+    which keeps pre-budget custom strategies working; ``select_full`` declares
+    ``budget = N`` — that is what lets it actually train every valid client
+    instead of being silently truncated to ``clients_per_round``."""
     mask: Array    # (N,) float32 ∈ {0, 1}
     scores: Array  # (N,) float32 — the strategy's ranking statistic
     order: Array   # (N,) int32 — clients by descending priority, invalid last
+    budget: int | None = None  # static gather width; None → engine default
 
     @property
     def num_selected(self) -> Array:
         return self.mask.sum()
 
 
+def selection_budget(result: "SelectionResult", n_select: int,
+                     num_clients: int) -> int:
+    """Resolve a SelectionResult's STATIC training budget for an engine.
+
+    ``result.budget`` if declared (clamped to the client population), else the
+    engine's requested ``n_select``.  Raises if a strategy smuggled a traced
+    value into ``budget`` — the gather width must be compile-time static."""
+    b = n_select if result.budget is None else result.budget
+    try:
+        b = int(b)
+    except TypeError as e:  # jax TracerIntegerConversionError subclasses this
+        raise ValueError(
+            "SelectionResult.budget must be a static Python int (it is the "
+            "engines' gather width and must be known at trace time); got "
+            f"{type(result.budget)}") from e
+    return max(0, min(b, int(num_clients)))
+
+
 def topn_mask(scores: Array, valid: Array, n_select: int):
     """(mask, order): 0/1 mask + priority order of the top-n *valid* entries.
 
     The building block custom strategies (``register_strategy``) compose with:
-    rank by any (N,) score vector, gate by any (N,) validity predicate."""
+    rank by any (N,) score vector, gate by any (N,) validity predicate.
+    ``n_select`` doubles as the strategy's budget: pass it (clamped to N) as
+    ``SelectionResult.budget`` so the engines gather exactly that many
+    training slots — a strategy may ask for any static width, including one
+    wider than the experiment's ``clients_per_round``."""
     masked = jnp.where(valid, scores, NEG_INF)
     order = jnp.argsort(-masked)  # stable; invalid sink to the end
     ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
     chosen = (ranks < n_select) & valid
     return chosen.astype(jnp.float32), order.astype(jnp.int32)
+
+
+def _clamped(n_select: int, hists: Array) -> int:
+    """A top-n strategy's static budget: n_select clamped to the population."""
+    return min(int(n_select), hists.shape[0])
 
 
 _topn_mask = topn_mask  # pre-registry private name, kept for back-compat
@@ -89,7 +131,7 @@ def select_random(key: Array, hists: Array, n_select: int) -> SelectionResult:
     scores = jax.random.uniform(key, (n,))
     valid = hists.sum(axis=-1) > 0
     mask, order = _topn_mask(scores, valid, n_select)
-    return SelectionResult(mask, scores, order)
+    return SelectionResult(mask, scores, order, budget=_clamped(n_select, hists))
 
 
 def select_labelwise(key: Array, hists: Array, n_select: int) -> SelectionResult:
@@ -97,7 +139,7 @@ def select_labelwise(key: Array, hists: Array, n_select: int) -> SelectionResult
     scores = label_variance_normed(hists)
     valid = label_variance(hists) > 0  # Algorithm 1: σ²(L_i) ≠ 0 gate
     mask, order = _topn_mask(scores, valid, n_select)
-    return SelectionResult(mask, scores, order)
+    return SelectionResult(mask, scores, order, budget=_clamped(n_select, hists))
 
 
 def select_labelwise_unnorm(key: Array, hists: Array, n_select: int) -> SelectionResult:
@@ -105,7 +147,7 @@ def select_labelwise_unnorm(key: Array, hists: Array, n_select: int) -> Selectio
     scores = label_variance(hists)
     valid = scores > 0
     mask, order = _topn_mask(scores, valid, n_select)
-    return SelectionResult(mask, scores, order)
+    return SelectionResult(mask, scores, order, budget=_clamped(n_select, hists))
 
 
 def select_coverage(key: Array, hists: Array, n_select: int) -> SelectionResult:
@@ -113,7 +155,7 @@ def select_coverage(key: Array, hists: Array, n_select: int) -> SelectionResult:
     scores = selection_priority(hists)
     valid = label_variance(hists) > 0
     mask, order = _topn_mask(scores, valid, n_select)
-    return SelectionResult(mask, scores, order)
+    return SelectionResult(mask, scores, order, budget=_clamped(n_select, hists))
 
 
 def select_kl(key: Array, hists: Array, n_select: int) -> SelectionResult:
@@ -121,7 +163,7 @@ def select_kl(key: Array, hists: Array, n_select: int) -> SelectionResult:
     scores = uniformity_score(hists)
     valid = hists.sum(axis=-1) > 0
     mask, order = _topn_mask(scores, valid, n_select)
-    return SelectionResult(mask, scores, order)
+    return SelectionResult(mask, scores, order, budget=_clamped(n_select, hists))
 
 
 def select_entropy(key: Array, hists: Array, n_select: int) -> SelectionResult:
@@ -135,14 +177,14 @@ def select_entropy(key: Array, hists: Array, n_select: int) -> SelectionResult:
     scores = -(p * jnp.log(jnp.maximum(p, 1e-30))).sum(-1)
     valid = hists.sum(axis=-1) > 0
     mask, order = _topn_mask(scores, valid, n_select)
-    return SelectionResult(mask, scores, order)
+    return SelectionResult(mask, scores, order, budget=_clamped(n_select, hists))
 
 
 def select_full(key: Array, hists: Array, n_select: int) -> SelectionResult:
-    del key, n_select
+    del key, n_select  # budget is the whole population, not clients_per_round
     valid = (hists.sum(axis=-1) > 0).astype(jnp.float32)
     order = jnp.argsort(-valid).astype(jnp.int32)
-    return SelectionResult(valid, valid, order)
+    return SelectionResult(valid, valid, order, budget=hists.shape[0])
 
 
 SelectFn = Callable[[Array, Array, int], SelectionResult]
@@ -164,8 +206,21 @@ def register_strategy(name: str, fn: SelectFn, *,
     The callable must follow the module contract
     ``fn(key, hists, n_select) -> SelectionResult`` built from traceable JAX
     ops only — registered strategies compile directly into the simulation
-    engine's traced stack+index dispatch (repro.fl.sim._select) and the host
-    round, no engine edits required.
+    engine's traced stack+index dispatch (repro.fl.sim._select), the host
+    round, and the gather-based SPMD sharded round, no engine edits required.
+
+    Budget contract: ``SelectionResult.budget`` must be a STATIC Python int
+    (or ``None`` → the engine's ``clients_per_round``).  It is the number of
+    ``order``-prefix training slots the engines gather — declare it wider
+    than ``clients_per_round`` (up to ``hists.shape[0]``) and every engine
+    trains that many clients without truncation; ``select_full`` declares the
+    whole population this way.  The mask must stay inside the window:
+    ``mask[order[budget:]] == 0`` always (compose with ``topn_mask`` and this
+    holds by construction) — engines assert ``num_selected == mask.sum()``.
+    Validity contract: clients with an EMPTY histogram must be unselectable
+    (gate ``valid`` on a ``hists``-derived predicate).  Engines report
+    unavailable/dark clients as empty histograms and rely on this single gate
+    for availability masking.
 
     Stable-id contract: a *new* name is appended to the id ledger and gets
     ``strategy_id(name) == len(registered_strategies()) - 1``; re-registering

@@ -29,7 +29,9 @@ Three orthogonal registries make every axis pluggable without engine edits:
   that lower onto the base plan host-side before the arrays enter a device.
 * **engines** — ``register_engine(name, fn)``: "sim" (the compiled vmapped
   grid, one XLA program), "host" (the legacy per-round loop, the parity
-  oracle), "sharded" (the SPMD pod-scale round; needs a device per client).
+  oracle), "sharded" (the gather-based SPMD pod-scale round: clients in
+  equal blocks per mesh slice, any registered strategy, training FLOPs
+  scale with the selection budget).
 
 ``run_fl`` and ``run_grid`` are now thin shims over this surface.
 """
@@ -409,7 +411,10 @@ class ExperimentSpec:
 
 @dataclasses.dataclass
 class ExperimentResult:
-    """Labeled grid trajectories: axes (scenario, strategy, seed, round)."""
+    """Labeled grid trajectories: axes (scenario, strategy, seed, round).
+
+    ``meta`` carries engine-specific, JSON-able side facts — e.g. the sharded
+    engine's realized FLOP sparsity per strategy (``meta["sharded"]``)."""
     scenarios: Tuple[str, ...]
     strategies: Tuple[str, ...]
     seeds: Tuple[int, ...]
@@ -419,6 +424,7 @@ class ExperimentResult:
     engine: str = "sim"
     wall_s: float = 0.0
     compile_s: float = 0.0
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     AXES = ("scenario", "strategy", "seed", "round")
 
@@ -509,6 +515,7 @@ class ExperimentResult:
             "seeds": [int(s) for s in self.seeds],
             "engine": self.engine,
             "wall_s": self.wall_s, "compile_s": self.compile_s,
+            "meta": self.meta,
             "accuracy": self.accuracy.tolist(),
             "loss": self.loss.tolist(),
             "num_selected": self.num_selected.tolist(),
@@ -524,7 +531,7 @@ class ExperimentResult:
             loss=np.asarray(d["loss"], np.float32),
             num_selected=np.asarray(d["num_selected"], np.float32),
             engine=d.get("engine", "sim"), wall_s=d.get("wall_s", 0.0),
-            compile_s=d.get("compile_s", 0.0))
+            compile_s=d.get("compile_s", 0.0), meta=d.get("meta", {}))
 
 
 # ---------------------------------------------------------------------------
@@ -532,7 +539,8 @@ class ExperimentResult:
 # ---------------------------------------------------------------------------
 # An engine consumes (spec, lowered_scenarios, ds) and returns
 # (accuracy, loss, num_selected) arrays shaped (K, S, R, rounds) plus
-# (wall_s, compile_s).
+# (wall_s, compile_s) and optionally a trailing JSON-able meta dict
+# (surfaced as ExperimentResult.meta).
 EngineFn = Callable[..., Tuple[np.ndarray, np.ndarray, np.ndarray, float, float]]
 
 _ENGINES: Dict[str, EngineFn] = {}
@@ -621,13 +629,19 @@ def _engine_host(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
 
 def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
                     ds):
-    """Pod-scale SPMD: each mesh slice along the client axis is one client;
-    selection is an all-gather of σ² scalars, aggregation a masked psum.
+    """Pod-scale SPMD: the gather-based client-parallel round — selection is
+    an all-gather of per-client histograms through the strategy registry,
+    training runs only on the ``order[:budget]`` gathered client shards, and
+    the weighted delta psum scatters the aggregate back.
 
-    Deployment-shaped constraints: needs ``jax.device_count() >=
-    fl.num_clients`` (one group per client; use
-    ``--xla_force_host_platform_device_count`` to emulate), the ``labelwise``
-    strategy (scores are computed in-shard) and fedavg aggregation."""
+    Any registered strategy and fedavg/fedsgd aggregation are supported (each
+    strategy compiles its own round with its own static budget).  Clients are
+    distributed over the mesh in equal blocks: the client axis takes the
+    largest device count dividing ``fl.num_clients`` (one client per slice
+    when there are enough devices; emulate more with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  Realized FLOP
+    sparsity per strategy (1 − trained/N) is reported in the result's
+    ``meta["sharded"]``."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
@@ -635,25 +649,21 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     from repro.data import ImageDataset, client_batches, materialize_round
     from repro.models import cnn_init, cnn_loss
     from repro.optim import get_optimizer
-    from .client import local_train
+    from .client import local_gradient, local_train
     from .sharded import make_sharded_fl_round
 
-    if tuple(spec.strategies) != ("labelwise",):
+    cfg = spec.fl
+    agg = spec.aggregation or cfg.aggregation
+    if agg not in ("fedavg", "fedsgd"):
         raise ValueError(
-            "engine='sharded' computes selection scores in-shard and only "
-            f"supports strategies=('labelwise',); got {spec.strategies}")
-    if (spec.aggregation or spec.fl.aggregation) != "fedavg":
-        raise ValueError("engine='sharded' supports fedavg aggregation only")
-    n_clients = spec.fl.num_clients
-    if jax.device_count() < n_clients:
-        raise RuntimeError(
-            f"engine='sharded' needs one device per client: have "
-            f"{jax.device_count()} devices for {n_clients} clients (emulate "
-            "with XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+            f"engine='sharded' supports fedavg/fedsgd aggregation; got {agg!r}")
+    n_clients = cfg.num_clients
+    ndev = jax.device_count()
+    groups = (n_clients if ndev >= n_clients else
+              max(g for g in range(1, ndev + 1) if n_clients % g == 0))
 
     ds = ds or ImageDataset()
-    cfg = spec.fl
-    mesh = jax.make_mesh((n_clients,), ("clients",))
+    mesh = jax.make_mesh((groups,), ("clients",))
     opt = get_optimizer(cfg.optimizer, cfg.lr)
     test_x, test_y = ds.test_set(spec.eval_n_per_class)
     eval_jit = jax.jit(lambda p: cnn_loss(p, test_x, test_y))
@@ -662,44 +672,74 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
         return cnn_loss(params, batch["images"], batch["labels"],
                         batch["valid"])
 
-    def local_step(params, batch):
-        # per-shard leaves are (1, n_batches, batch, ...): one client group
-        one = jax.tree_util.tree_map(lambda x: x[0], batch)
-        return local_train(params, opt, one, loss_fn, cfg.local_epochs)[0]
+    if agg == "fedavg":
+        server_lr = cfg.server_lr
 
-    k_n, r_n = len(lowered), len(spec.seeds)
+        def local_step(params, batch):   # batch: ONE client, no client axis
+            return local_train(params, opt, batch, loss_fn,
+                               cfg.local_epochs)[0]
+    else:
+        server_lr = 1.0                  # fedsgd has no server interpolation
+
+        def local_step(params, batch):
+            # Client delta −lr·∇ makes the weighted delta mean ≡ the engines'
+            # aggregate-gradients-then-step FedSGD update.
+            g, _ = local_gradient(params, batch, loss_fn)
+            return jax.tree_util.tree_map(
+                lambda p, gr: p - cfg.lr * gr, params, g)
+
+    k_n, s_n, r_n = len(lowered), len(spec.strategies), len(spec.seeds)
     t_n = spec.num_rounds
-    acc = np.zeros((k_n, 1, r_n, t_n), np.float32)
+    acc = np.zeros((k_n, s_n, r_n, t_n), np.float32)
     loss = np.zeros_like(acc)
     nsel = np.zeros_like(acc)
     t0 = time.perf_counter()
-    round_fn = None
+    pspec = jax.tree_util.tree_map(
+        lambda _: P(),
+        jax.eval_shape(lambda k: cnn_init(k, num_classes=ds.num_classes,
+                                          image_size=ds.image_size,
+                                          channels=ds.channels),
+                       jax.random.PRNGKey(0)))
+    round_fns = {
+        strat: make_sharded_fl_round(
+            mesh, "clients", local_step, n_select=cfg.clients_per_round,
+            num_classes=ds.num_classes, params_pspec=pspec,
+            batch_pspec={"images": P(), "labels": P(), "valid": P()},
+            num_clients=n_clients, strategy=strat, server_lr=server_lr)
+        for strat in spec.strategies}
     for k, low in enumerate(lowered):
         for r, seed in enumerate(spec.seeds):
             plan = low.composed_plan(r)
             key = jax.random.PRNGKey(int(seed))
-            params = cnn_init(jax.random.fold_in(key, 1),
-                              num_classes=ds.num_classes,
-                              image_size=ds.image_size, channels=ds.channels)
-            if round_fn is None:
-                pspec = jax.tree_util.tree_map(lambda _: P(), params)
-                round_fn = make_sharded_fl_round(
-                    mesh, "clients", local_step,
-                    n_select=cfg.clients_per_round,
-                    num_classes=ds.num_classes, params_pspec=pspec,
-                    batch_pspec={"images": P(), "labels": P(), "valid": P()})
+            init = cnn_init(jax.random.fold_in(key, 1),
+                            num_classes=ds.num_classes,
+                            image_size=ds.image_size, channels=ds.channels)
+            params = {strat: init for strat in spec.strategies}
             for t in range(t_n):
+                # Round data and keys depend only on (scenario, seed, round)
+                # — materialize once and step every strategy's own params.
                 kt = jax.random.fold_in(key, 1000 + t)
                 data = materialize_round(ds, plan[t % plan.shape[0]],
                                          jax.random.fold_in(kt, 0))
                 batches = client_batches(data, cfg.batch_size)
-                params, info = round_fn(params, batches, data["labels"],
-                                        data["valid"])
-                l, m = eval_jit(params)
-                acc[k, 0, r, t] = float(m["accuracy"])
-                loss[k, 0, r, t] = float(l)
-                nsel[k, 0, r, t] = float(info["num_selected"])
-    return acc, loss, nsel, time.perf_counter() - t0, 0.0
+                k_sel = jax.random.fold_in(kt, 1)
+                for s, strat in enumerate(spec.strategies):
+                    params[strat], info = round_fns[strat](
+                        params[strat], batches, data["labels"],
+                        data["valid"], k_sel)
+                    l, m = eval_jit(params[strat])
+                    acc[k, s, r, t] = float(m["accuracy"])
+                    loss[k, s, r, t] = float(l)
+                    nsel[k, s, r, t] = float(info["num_selected"])
+    meta = {"sharded": {
+        "groups": groups, "clients": n_clients,
+        "clients_per_group": n_clients // groups,
+        "strategies": {
+            strat: {"budget": fn.budget,
+                    "trained_per_round": fn.trained_per_round,
+                    "flop_sparsity": fn.flop_sparsity}
+            for strat, fn in round_fns.items()}}}
+    return acc, loss, nsel, time.perf_counter() - t0, 0.0, meta
 
 
 register_engine("sim", _engine_sim)
@@ -721,13 +761,15 @@ def run(spec: ExperimentSpec, *, ds=None) -> ExperimentResult:
     lowered = [s.lower(spec.fl, spec.seeds, spec.num_rounds)
                for s in spec.scenarios]
     engine = _ENGINES[spec.engine]
-    acc, loss, nsel, wall_s, compile_s = engine(spec, lowered, ds)
+    out = engine(spec, lowered, ds)
+    acc, loss, nsel, wall_s, compile_s = out[:5]
+    meta = out[5] if len(out) > 5 else {}
     return ExperimentResult(
         scenarios=tuple(s.name for s in spec.scenarios),
         strategies=tuple(spec.strategies), seeds=tuple(spec.seeds),
         accuracy=np.asarray(acc), loss=np.asarray(loss),
         num_selected=np.asarray(nsel), engine=spec.engine,
-        wall_s=wall_s, compile_s=compile_s)
+        wall_s=wall_s, compile_s=compile_s, meta=meta)
 
 
 # ---------------------------------------------------------------------------

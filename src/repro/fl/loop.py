@@ -118,6 +118,10 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
         params, info = fl_round(params, batches, data["hists"],
                                 jax.random.fold_in(kt, 1))
         loss, m = eval_jit(params)
+        ns, ms = float(info["num_selected"]), float(info["mask_sum"])
+        assert ns == ms, (
+            f"round {t}: selection budget violated — trained {ns} clients but "
+            f"mask selects {ms}; a strategy's mask escaped its budget window")
         hist_acc.append(float(m["accuracy"]))
         hist_loss.append(float(loss))
         hist_sel.append(float(info["num_selected"]))

@@ -2,11 +2,17 @@
 
 Flow per round T:
   1. every client reports its label histogram → σ²(L_i) scalars (cheap),
-  2. the strategy ranks clients and the server picks order[:n] (Eq. 3),
-  3. ONLY those n clients run local training (vmap over the gathered subset —
-     unselected clients spend zero FLOPs, matching §V's saving),
+  2. the strategy ranks clients and the server picks order[:budget] (Eq. 3) —
+     the budget is the STRATEGY's static slot count (SelectionResult.budget,
+     default clients_per_round), so "full" really trains every valid client
+     and a wide registered strategy is never truncated,
+  3. ONLY those budget clients run local training (vmap over the gathered
+     subset — unselected clients spend zero FLOPs, matching §V's saving),
   4. masked weighted aggregation (FedAvg Eq. 1 / Algorithm-1 uniform mean),
   5. server interpolates and broadcasts.
+
+Budget invariant (asserted by the host loop per round): every mask-selected
+client sits inside the gathered window, so ``num_selected == mask.sum()``.
 
 ``aggregation='fedsgd'`` switches clients to single-gradient reporting with a
 server-side SGD step (the paper's FedSGD baseline).
@@ -19,7 +25,8 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import fedavg_aggregate, get_strategy, interpolate
+from repro.core import (fedavg_aggregate, get_strategy, interpolate,
+                        selection_budget)
 from repro.optim import apply_updates, get_optimizer
 from .client import local_train, local_gradient
 
@@ -82,8 +89,12 @@ def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
     def fl_round(global_params: PyTree, round_batches: Dict[str, Array],
                  hists: Array, key: Array) -> Tuple[PyTree, Dict[str, Array]]:
         sel = strategy(key, hists, n_sel)
-        idx = sel.order[:n_sel]                       # clients asked to train
-        live = sel.mask[idx]                          # 0 where count < n
+        # The gather width is the STRATEGY's static budget, not
+        # clients_per_round: "full" gathers the whole population, a wide
+        # registered strategy gathers its declared slot count untruncated.
+        budget = selection_budget(sel, n_sel, hists.shape[0])
+        idx = sel.order[:budget]                      # clients asked to train
+        live = sel.mask[idx]                          # 0 where count < budget
         data_sel = jax.tree_util.tree_map(lambda x: x[idx], round_batches)
         new_params, m = client_update_step(global_params, data_sel, live,
                                            loss_fn, opt, fl_cfg, agg_kind)
@@ -92,6 +103,10 @@ def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
             "selected": idx,
             "live": live,
             "num_selected": live.sum(),
+            # mask.sum() must equal num_selected — the budget window covers
+            # every mask-selected client; run_fl_host asserts it per round.
+            "mask_sum": sel.mask.sum(),
+            "budget": jnp.int32(budget),
             "client_loss": (m["loss"] * live).sum() / jnp.maximum(live.sum(), 1),
             "scores": sel.scores,
         }

@@ -1,33 +1,60 @@
-"""Pod-scale FL: the paper's round as ONE SPMD program over the mesh.
+"""Pod-scale FL: the paper's round as ONE SPMD program over the mesh — with
+the training phase GATHER-BASED, so only the selected budget of clients
+spends FLOPs.
 
-Mapping (DESIGN.md §2): the mesh's client axis (``pod`` on the production
-mesh) carries one FL client group per slice.  Each group:
-  1. computes its label histogram locally and its σ²(L_i)/n_i scalar,
-  2. all-gathers the N scalars (Algorithm 1's "transmit σ² to server" — N
-     floats, not N models, preserving the paper's O(N log N)-on-scalars cost),
-  3. every shard deterministically computes the same top-n mask,
-  4. runs local training on its own shard-resident data,
-  5. enters a masked weighted psum of parameter deltas — FedAvg as a
-     collective; unselected groups contribute zeros and receive the new
-     global params from the same all-reduce (the server broadcast, fused).
+Mapping (DESIGN.md §2, revised): the mesh's client axis (``pod`` on the
+production mesh) carries a *block* of clients per slice — ``num_clients``
+need not equal the device count; each of the G groups holds C = N/G clients.
+Each round:
 
-SPMD cannot skip computation per shard, so unlike the vmap simulator the
-unselected groups still *compute* and are masked out of the reduction; the
-paper's compute saving is realized at the simulator scale and reported as
-mask sparsity here (DESIGN.md §2).
+  1. every group computes its C clients' label histograms locally (an
+     unavailable client's histogram is zeroed — the single availability
+     application every engine shares),
+  2. all-gathers the (N, C_classes) histogram matrix — Algorithm 1's
+     "transmit statistics to server" step: N small integer vectors, not N
+     models, preserving the paper's cheap-server-side cost.  (The paper's
+     labelwise strategy needs only the σ² scalars; gathering the histograms
+     instead is what lets ANY registered strategy run in-shard.)
+  3. every shard deterministically computes the same SelectionResult through
+     the strategy registry (repro.core.selection) — mask, order, and the
+     strategy's STATIC training budget B,
+  4. **gather**: the batch shards of ``order[:B_pad]`` (B padded up to a
+     multiple of G so the sub-round stays SPMD-even) are gathered so each
+     group holds exactly B_pad/G selected clients' data; local training runs
+     vmapped over those slots ONLY — unselected clients spend ZERO training
+     FLOPs instead of being masked out of the reduction.  Realized FLOP
+     sparsity is 1 − B_pad/N per round (the wrapper exposes it statically as
+     ``round_fn.flop_sparsity``),
+  5. **scatter**: the trained slots' parameter deltas enter a weighted psum
+     pair (live mask × n_i weights, FedAvg Eq. 1) whose result is replicated
+     to every shard — the server broadcast, fused into the same collective.
+     Deltas (not params) are reduced, so a bf16 ``agg_dtype`` halves the
+     cross-pod all-reduce bytes.
+
+``mode="masked"`` keeps the legacy masked-psum round (every client trains,
+the mask zeroes unselected contributions) as the measured baseline —
+``benchmarks/sharded_round.py`` pins the gather-based round's win whenever
+B < N.
+
+Numerics match the host round / compiled simulator: identical histograms →
+identical registry selection (same tie-breaking), identical ``local_step``
+math, and the weighted delta mean equals fedavg-then-interpolate
+algebraically, so host/sim/sharded trajectories agree to float tolerance
+(pinned by tests/test_experiment.py).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.label_stats import histogram, label_variance, label_variance_normed
-from repro.core.aggregation import psum_aggregate
-from repro.optim import apply_updates
+from repro.core.label_stats import histogram
+from repro.core.selection import (SelectFn, SelectionResult, get_strategy,
+                                  selection_budget, topn_mask)
+from repro.core.aggregation import gather_client_shards, psum_weighted_mean
 
 Array = jax.Array
 PyTree = Any
@@ -49,62 +76,134 @@ except ImportError:  # pragma: no cover
 
 
 def topn_mask_from_scores(scores: Array, n_select: int) -> Array:
-    """Deterministic top-n 0/1 mask over gathered scores (σ² ≠ 0 gate)."""
-    valid = scores > 0
-    masked = jnp.where(valid, scores, -1e30)
-    order = jnp.argsort(-masked)
-    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
-    return ((ranks < n_select) & valid).astype(jnp.float32)
+    """Deterministic top-n 0/1 mask over gathered scores (σ² ≠ 0 gate).
+
+    Back-compat wrapper over the registry building block
+    (``repro.core.selection.topn_mask``) — the round itself now dispatches
+    through the strategy registry, so sharded selection shares the other
+    engines' tie-breaking by construction instead of re-implementing it."""
+    mask, _ = topn_mask(scores, scores > 0, n_select)
+    return mask
+
+
+def _static_budget(select_fn: SelectFn, n_select: int, num_clients: int,
+                   num_classes: int) -> int:
+    """Trace the strategy on abstract histograms to read its STATIC budget
+    (SelectionResult.budget) at build time — the gather width B."""
+    box: Dict[str, int] = {}
+
+    def probe(key, hists):
+        r = select_fn(key, hists, n_select)
+        box["budget"] = selection_budget(r, n_select, num_clients)
+        return r.mask
+
+    jax.eval_shape(probe, jax.ShapeDtypeStruct((2,), jnp.uint32),
+                   jax.ShapeDtypeStruct((num_clients, num_classes),
+                                        jnp.float32))
+    return box["budget"]
 
 
 def make_sharded_fl_round(mesh: Mesh, client_axis: str,
                           local_step: Callable[[PyTree, Dict[str, Array]], PyTree],
                           n_select: int, num_classes: int,
                           params_pspec: PyTree, batch_pspec: PyTree,
-                          agg_dtype=None, with_availability: bool = False) -> Callable:
+                          agg_dtype=None, with_availability: bool = False,
+                          num_clients: Optional[int] = None,
+                          strategy: Union[str, SelectFn] = "labelwise",
+                          server_lr: float = 1.0,
+                          mode: str = "gather") -> Callable:
     """Build the SPMD FL round.
 
-    ``local_step(params, batch) -> params`` is the client's local training
-    (already pjit-sharded *within* the client group over the remaining axes).
-    ``params_pspec``/``batch_pspec`` are PartitionSpecs WITHOUT the client
-    axis (they describe intra-group sharding); the batch gains a leading
-    client-sharded axis here.
+    ``local_step(params, batch) -> params`` is ONE client's local training
+    (already pjit-sharded *within* the client group over the remaining axes);
+    batch leaves carry no client axis — the round vmaps it over each group's
+    gathered training slots.  ``params_pspec``/``batch_pspec`` are
+    PartitionSpecs WITHOUT the client axis (intra-group sharding); the batch
+    gains a leading client-sharded axis here.
+
+    ``num_clients`` (default: one client per mesh slice) must be a multiple
+    of the client-axis size; each group then holds num_clients/G clients.
+    ``strategy`` is a registered strategy name or a raw SelectFn — its STATIC
+    ``SelectionResult.budget`` (default ``n_select``) fixes the gather width;
+    ``full`` budgets the whole population and so degenerates to training
+    everyone.  ``server_lr`` is the server interpolation rate (θ ← θ + η_s·Δ̄).
+
+    ``mode="gather"`` (default) trains only the ``order[:B_pad]`` gathered
+    slots (B padded to a multiple of G); ``mode="masked"`` is the legacy
+    every-client-trains masked-psum baseline.  Both share selection and the
+    weighted-delta scatter, so they are numerically interchangeable.
 
     ``with_availability=True`` adds a trailing ``avail`` argument — a (N,)
-    0/1 per-group availability vector (repro.core.noniid.availability_plan
-    row), sharded over the client axis.  An unavailable group's score is
-    forced to 0 (the σ²≠0 gate then excludes it) and it is masked out of the
-    aggregation even if every group is dark.
+    0/1 per-client availability vector (repro.core.noniid.availability_plan
+    row), sharded over the client axis.  An unavailable client's histogram is
+    zeroed, so every registry strategy's validity gate excludes it — the same
+    single availability application the compiled simulator uses.
+
+    Returned signature: ``round_fn(params, batch, labels, valid, key
+    [, avail]) -> (new_params, info)`` with ``key`` the round's selection
+    PRNG key (replicated; used by stochastic strategies such as ``random``).
+    The wrapper exposes the static facts: ``round_fn.budget`` (B),
+    ``round_fn.trained_per_round`` (clients that spend FLOPs: B_pad gathered,
+    N masked) and ``round_fn.flop_sparsity`` (1 − trained/N).
     """
+    if mode not in ("gather", "masked"):
+        raise ValueError(f"mode must be 'gather' or 'masked'; got {mode!r}")
     n_groups = mesh.shape[client_axis]
+    n_clients = n_groups if num_clients is None else int(num_clients)
+    if n_clients % n_groups:
+        raise ValueError(
+            f"num_clients ({n_clients}) must be a multiple of the client-axis "
+            f"size ({n_groups}) so every group holds the same client block")
+    per_group = n_clients // n_groups
+    select_fn = get_strategy(strategy) if isinstance(strategy, str) else strategy
+
+    budget = _static_budget(select_fn, n_select, n_clients, num_classes)
+    slots = max(1, -(-budget // n_groups))       # selected clients per group
+    budget_padded = slots * n_groups             # static gather width ≤ N
+    trained_per_round = budget_padded if mode == "gather" else n_clients
 
     def round_fn(params: PyTree, batch: Dict[str, Array], labels: Array,
-                 valid: Array, avail: Array | None = None
+                 valid: Array, key: Array, avail: Array | None = None
                  ) -> Tuple[PyTree, Dict[str, Array]]:
-        # labels/valid: (clients_total, n_i) sharded over client axis →
-        # per-shard (clients_per_group, n_i).
-        hist = histogram(jnp.where(valid, labels, 0), num_classes, valid).sum(0)
-        score = label_variance_normed(hist[None])[0]
+        # labels/valid: (num_clients, n_i) sharded over the client axis →
+        # per-shard (per_group, n_i); batch leaves likewise (per_group, ...).
+        hist = histogram(jnp.where(valid, labels, 0), num_classes, valid)
         if avail is not None:
-            score = score * avail.reshape(()).astype(score.dtype)
-        scores = jax.lax.all_gather(score, client_axis)        # (n_groups,)
-        mask = topn_mask_from_scores(scores, n_select)
-        my_mask = mask[jax.lax.axis_index(client_axis)]
-        if avail is not None:
-            my_mask = my_mask * avail.reshape(()).astype(my_mask.dtype)
+            hist = hist * avail[:, None].astype(hist.dtype)  # dark → empty
+        hists_all = jax.lax.all_gather(hist, client_axis, tiled=True)  # (N,C)
+        sel = select_fn(key, hists_all, n_select)    # replicated on all shards
+        sizes = hists_all.sum(-1)                    # n_i (valid counts)
+        g = jax.lax.axis_index(client_axis)
 
-        new_local = local_step(params, batch)
+        if mode == "gather":
+            # Re-shard: the top-B_pad selected clients' batch shards are
+            # gathered so each group trains exactly `slots` of them — the
+            # other N − B_pad clients spend zero training FLOPs.
+            my_slots = jax.lax.dynamic_slice_in_dim(
+                sel.order[:budget_padded], g * slots, slots)
+            my_batch = jax.tree_util.tree_map(
+                lambda x: x[my_slots], gather_client_shards(batch, client_axis))
+        else:
+            my_slots = g * per_group + jnp.arange(per_group, dtype=jnp.int32)
+            my_batch = batch
+        live = sel.mask[my_slots]           # 0 on dead/padded slots
+
+        new_local = jax.vmap(local_step, in_axes=(None, 0))(params, my_batch)
         dt = agg_dtype or jnp.float32
         # Aggregating DELTAS (not params) tolerates low precision: bf16
         # halves the cross-pod all-reduce bytes (§Perf, FL-round lever).
         delta = jax.tree_util.tree_map(
-            lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32)).astype(dt),
+            lambda a, b: (a.astype(jnp.float32)
+                          - b.astype(jnp.float32)).astype(dt),
             new_local, params)
-        agg_delta = psum_aggregate(delta, my_mask, client_axis)
+        agg_delta = psum_weighted_mean(delta, live * sizes[my_slots],
+                                       client_axis)
         new_global = jax.tree_util.tree_map(
-            lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+            lambda p, d: (p.astype(jnp.float32)
+                          + server_lr * d).astype(p.dtype),
             params, agg_delta)
-        info = {"mask": mask, "num_selected": mask.sum(), "scores": scores}
+        info = {"mask": sel.mask, "num_selected": sel.mask.sum(),
+                "scores": sel.scores}
         return new_global, info
 
     def add_client_axis(spec):
@@ -116,10 +215,20 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
     lv_spec = P(client_axis)
     out_info_spec = {"mask": P(), "num_selected": P(), "scores": P()}
 
-    in_specs = (params_pspec, batch_specs, lv_spec, lv_spec)
+    in_specs = (params_pspec, batch_specs, lv_spec, lv_spec, P())
     if with_availability:
         in_specs = in_specs + (lv_spec,)
-    return shard_map(
-        round_fn, mesh,
-        in_specs=in_specs,
-        out_specs=(params_pspec, out_info_spec))
+    # jit the mapped round: eager shard_map re-lowers on every call, which
+    # would make each round pay compile time — jit compiles once per shape.
+    mapped = jax.jit(shard_map(round_fn, mesh, in_specs=in_specs,
+                               out_specs=(params_pspec, out_info_spec)))
+
+    @functools.wraps(mapped)
+    def wrapper(*args):
+        return mapped(*args)
+
+    wrapper.budget = budget
+    wrapper.trained_per_round = trained_per_round
+    wrapper.flop_sparsity = 1.0 - trained_per_round / n_clients
+    wrapper.mode = mode
+    return wrapper

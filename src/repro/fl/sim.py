@@ -35,7 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import STRATEGIES, registered_strategies, strategy_id
+from repro.core import (STRATEGIES, registered_strategies, selection_budget,
+                        strategy_id)
 from repro.data import ImageDataset, client_batches, materialize_round
 from repro.models import cnn_init, cnn_loss
 from repro.optim import get_optimizer
@@ -85,7 +86,7 @@ class GridResult:
 
 def _select(sid: Array, key: Array, hists: Array, n_sel: int,
             universe: Sequence[str]):
-    """Traced strategy dispatch → (mask, scores, order).
+    """Traced strategy dispatch → (mask, scores, order, budget).
 
     Every strategy in ``universe`` is computed unconditionally (each is
     sub-millisecond math on an (N, C) histogram) and the requested one is
@@ -95,15 +96,23 @@ def _select(sid: Array, key: Array, hists: Array, n_sel: int,
     and the branch-free form keeps the scan body a single straight-line
     graph.  The universe is the *requested* strategy set, so the compiled
     program only pays for the strategies the grid actually runs; a
-    single-entry universe compiles to a direct call."""
+    single-entry universe compiles to a direct call.
+
+    ``budget`` is the STATIC gather width — the max of the universe's
+    declared ``SelectionResult.budget``s (the compiled program is shared
+    across the strategy axis, so it must size training for the widest
+    strategy; narrower strategies' extra slots are dead, mask 0).  A universe
+    containing ``full`` therefore sizes training for the whole population."""
+    n_clients = hists.shape[0]
     if len(universe) == 1:
         r = STRATEGIES[universe[0]](key, hists, n_sel)
-        return r.mask, r.scores, r.order
+        return r.mask, r.scores, r.order, selection_budget(r, n_sel, n_clients)
     rs = [STRATEGIES[n](key, hists, n_sel) for n in universe]
+    budget = max(selection_budget(r, n_sel, n_clients) for r in rs)
     masks = jnp.stack([r.mask for r in rs])
     scores = jnp.stack([r.scores for r in rs])
     orders = jnp.stack([r.order for r in rs])
-    return masks[sid], scores[sid], orders[sid]
+    return masks[sid], scores[sid], orders[sid], budget
 
 
 def make_trial_fn(fl_cfg, ds: Optional[ImageDataset] = None, *,
@@ -111,13 +120,18 @@ def make_trial_fn(fl_cfg, ds: Optional[ImageDataset] = None, *,
                   rounds: Optional[int] = None,
                   eval_n_per_class: int = 50,
                   strategies: Optional[Sequence[str]] = None):
-    """Build ``trial(plan, sid, seed, avail) -> (acc, loss, nsel)`` — one FL
-    trial as a pure jit/vmap-able function of device arrays.
+    """Build ``trial(plan, sid, seed, avail) -> (acc, loss, nsel, msum)`` —
+    one FL trial as a pure jit/vmap-able function of device arrays.
 
     plan: (T, N, n_max) int32 (−1 pad); sid: scalar int32 index into
-    ``strategies`` (default: every registered strategy, in stable-id order);
-    seed: scalar int32; avail: (T, N) f32 availability (pass all-ones for
-    the no-dropout scenario).  Returns three (rounds,) f32 trajectories.
+    ``strategies`` (default: every registered strategy, in stable-id order —
+    note that universe includes ``full``, so training is sized for the whole
+    population; pass the strategies you actually run); seed: scalar int32;
+    avail: (T, N) f32 availability (pass all-ones for the no-dropout
+    scenario).  Returns four (rounds,) f32 trajectories: accuracy, loss,
+    clients trained (``live.sum()``), and the selection mask sum — the last
+    two must be equal (the budget invariant; ``simulate``/``grid_arrays``
+    assert it after execution).
     """
     ds = ds or ImageDataset()
     universe = (tuple(strategies) if strategies is not None
@@ -150,28 +164,49 @@ def make_trial_fn(fl_cfg, ds: Optional[ImageDataset] = None, *,
             avail_t = jax.lax.dynamic_index_in_dim(avail, t % avail.shape[0], 0,
                                                    keepdims=False)
             data = materialize_round(ds, plan_t, jax.random.fold_in(kt, 0))
+            # Availability is applied ONCE, here: a dark client reports an
+            # empty histogram, so every registry strategy's validity gate
+            # excludes it.  (The old second application — re-masking `live`
+            # with avail_t[idx] — was redundant with this and is gone.)
             hists = data["hists"] * avail_t[:, None]
             batches = client_batches(data, fl_cfg.batch_size)
-            mask, scores, order = _select(sid, jax.random.fold_in(kt, 1),
-                                          hists, n_sel, universe)
-            idx = order[:n_sel]
-            live = mask[idx] * avail_t[idx]
+            mask, scores, order, budget = _select(
+                sid, jax.random.fold_in(kt, 1), hists, n_sel, universe)
+            # Enforce the registry validity contract engine-side: a client
+            # with an empty (possibly availability-zeroed) histogram is never
+            # live, even under a strategy whose own gate forgot it — here the
+            # plan may be intact (mask-mode avail), so the dark client's data
+            # is real and training it would silently leak influence.
+            mask = mask * (hists.sum(-1) > 0)
+            idx = order[:budget]          # the strategy's static gather width
+            live = mask[idx]
             data_sel = jax.tree_util.tree_map(lambda x: x[idx], batches)
             new_params, m = client_update_step(params, data_sel, live,
                                                loss_fn, opt, fl_cfg, agg_kind)
 
             ev_loss, ev_m = cnn_loss(new_params, test_x, test_y)
-            return new_params, (ev_m["accuracy"], ev_loss, live.sum())
+            return new_params, (ev_m["accuracy"], ev_loss, live.sum(),
+                                mask.sum())
 
-        _, (acc, loss, nsel) = jax.lax.scan(round_body, params,
-                                            jnp.arange(num_rounds))
-        return acc, loss, nsel
+        _, (acc, loss, nsel, msum) = jax.lax.scan(round_body, params,
+                                                  jnp.arange(num_rounds))
+        return acc, loss, nsel, msum
 
     return trial
 
 
 def _ones_avail(plan: np.ndarray) -> jnp.ndarray:
     return jnp.ones(plan.shape[:2], jnp.float32)
+
+
+def _assert_budget_invariant(nsel, msum) -> None:
+    """num_selected == mask.sum(): every mask-selected client was inside the
+    gathered budget window and therefore actually trained."""
+    nsel, msum = np.asarray(nsel), np.asarray(msum)
+    assert np.array_equal(nsel, msum), (
+        "selection budget violated: clients trained per round "
+        f"{nsel.tolist()} != mask.sum() {msum.tolist()}; a strategy's mask "
+        "escaped its declared budget window")
 
 
 def simulate(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
@@ -194,9 +229,10 @@ def simulate(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
     lowered = fn.lower(jnp.asarray(plan, jnp.int32), sid, jnp.int32(seed), av)
     compiled = lowered.compile()
     t1 = time.perf_counter()
-    acc, loss, nsel = jax.block_until_ready(
+    acc, loss, nsel, msum = jax.block_until_ready(
         compiled(jnp.asarray(plan, jnp.int32), sid, jnp.int32(seed), av))
     t2 = time.perf_counter()
+    _assert_budget_invariant(nsel, msum)
     return GridResult(np.asarray(acc), np.asarray(loss), np.asarray(nsel),
                       wall_s=t2 - t1, compile_s=t1 - t0)
 
@@ -286,8 +322,9 @@ def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
     t0 = time.perf_counter()
     compiled = fn.lower(*args).compile()
     t1 = time.perf_counter()
-    acc, loss, nsel = jax.block_until_ready(compiled(*args))
+    acc, loss, nsel, msum = jax.block_until_ready(compiled(*args))
     t2 = time.perf_counter()
+    _assert_budget_invariant(nsel, msum)
     return GridResult(np.asarray(acc), np.asarray(loss), np.asarray(nsel),
                       wall_s=t2 - t1, compile_s=t1 - t0)
 

@@ -114,8 +114,9 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
 
 def dryrun_fl_round(multi_pod: bool = True, save: bool = True,
                     agg_dtype_name: str = "float32"):
-    """Lower the paper's pod-scale FL aggregation round (label-stat gather +
-    masked psum over the ``pod`` axis) — proves the technique shards."""
+    """Lower the paper's pod-scale FL round (histogram all-gather → registry
+    selection → gather-based training of the selected budget → weighted delta
+    psum over the ``pod`` axis) — proves the technique shards."""
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.fl import make_sharded_fl_round
@@ -127,9 +128,9 @@ def dryrun_fl_round(multi_pod: bool = True, save: bool = True,
     n_groups = mesh.shape[client_axis]
 
     def local_step(params, batch):
-        # Per-shard leaves keep the leading group-local client axis; fold it
-        # into the sample batch for the CNN.
-        imgs = batch["images"].reshape((-1,) + batch["images"].shape[2:])
+        # ONE client's batch (no client axis) — the round vmaps this over the
+        # gathered training slots.
+        imgs = batch["images"].reshape((-1,) + batch["images"].shape[1:])
         labels = batch["labels"].reshape(-1)
         valid = batch["valid"].reshape(-1)
 
@@ -158,15 +159,20 @@ def dryrun_fl_round(multi_pod: bool = True, save: bool = True,
     }
     labels_abs = jax.ShapeDtypeStruct((n_groups, 290), jnp.int32)
     valid_abs = jax.ShapeDtypeStruct((n_groups, 290), jnp.bool_)
+    key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
     with mesh:
-        lowered = jax.jit(round_fn).lower(params_abs, batch_abs, labels_abs, valid_abs)
+        lowered = jax.jit(round_fn).lower(params_abs, batch_abs, labels_abs,
+                                          valid_abs, key_abs)
         compiled = lowered.compile()
     hlo = compiled.as_text()
     colls = collective_bytes(hlo)
     mem = compiled.memory_analysis()
     record = {
         "kind": "fl_round", "mesh": mesh_name(mesh), "client_axis": client_axis,
-        "agg_dtype": agg_dtype_name,
+        "agg_dtype": agg_dtype_name, "mode": round_fn.mode,
+        "budget": round_fn.budget,
+        "trained_per_round": round_fn.trained_per_round,
+        "flop_sparsity": round_fn.flop_sparsity,
         "collectives_by_kind": colls,
         "temp_bytes": float(getattr(mem, "temp_size_in_bytes", 0)),
     }

@@ -1,8 +1,8 @@
 """Test-tier configuration: fast unit tier by default, opt-in slow tier.
 
 ``pytest -q`` (the tier-1 invocation, scripts/run_tier1.sh) runs with an
-implied ``-m "not slow"`` so the unit tier stays under a minute on this
-container.  The slow tier (per-architecture smoke, FL integration loops,
+implied ``-m "not slow"`` so the unit tier stays fast (~1–2 minutes on this
+container; compile-bound micro-CNN engine tests dominate).  The slow tier (per-architecture smoke, FL integration loops,
 Pallas kernel sweeps, launch-step plans) runs with::
 
     PYTHONPATH=src python -m pytest -q -m "slow or not slow"   # everything

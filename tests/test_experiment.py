@@ -301,29 +301,44 @@ class TestSpecGridParity:
 
 @pytest.mark.slow
 class TestShardedEngine:
-    def test_sharded_engine_matches_sim_selection(self):
-        """engine='sharded' (one emulated device per client) agrees with the
-        compiled engine on selection counts and trains to finite loss.  Runs
-        in a subprocess: the device count must be forced before jax init."""
+    def test_sharded_gather_round_matches_sim_trajectories(self):
+        """8 emulated devices, 16 clients (2 per group), availability ON:
+        the gather-based sharded round pins FULL trajectory parity against
+        the compiled engine for both 'labelwise' and 'full' — and 'full'
+        trains every available client (> clients_per_round), with the
+        realized FLOP sparsity reported in meta.  Runs in a subprocess: the
+        device count must be forced before jax init."""
         script = textwrap.dedent("""
             import numpy as np
             from repro.configs.paper_cnn import FLConfig
-            from repro.fl import ExperimentSpec, ScenarioSpec, run
-            cfg = FLConfig(num_clients=6, clients_per_round=2,
+            from repro.fl import (ExperimentSpec, ScenarioSpec, availability,
+                                  run)
+            cfg = FLConfig(num_clients=16, clients_per_round=4,
                            global_epochs=2, local_epochs=1, batch_size=8,
                            lr=1e-3)
-            scen = (ScenarioSpec.from_case("case1b", samples_per_client=8),)
-            base = dict(scenarios=scen, strategies=("labelwise",), seeds=(0,),
-                        fl=cfg, eval_n_per_class=2)
+            scen = (ScenarioSpec.from_case(
+                "case1b", samples_per_client=8,
+                transforms=(availability(0.3, seed=5),)),)
+            base = dict(scenarios=scen, strategies=("labelwise", "full"),
+                        seeds=(0,), fl=cfg, eval_n_per_class=2)
             sh = run(ExperimentSpec(engine="sharded", **base))
             sim = run(ExperimentSpec(engine="sim", **base))
             np.testing.assert_array_equal(sh.num_selected, sim.num_selected)
-            assert np.isfinite(sh.loss).all()
-            assert sh.scenarios == sim.scenarios == ("case1b",)
+            np.testing.assert_allclose(sh.loss, sim.loss, rtol=2e-4,
+                                       atol=2e-5)
+            np.testing.assert_allclose(sh.accuracy, sim.accuracy, atol=5e-3)
+            # 'full' ignores clients_per_round: every available σ²-valid
+            # client trains (the old truncation capped this at 4)
+            assert (sh.num_selected[0, 1] > cfg.clients_per_round).all(), \\
+                sh.num_selected[0, 1]
+            st = sh.meta["sharded"]["strategies"]
+            assert st["labelwise"]["budget"] == 4
+            assert st["labelwise"]["flop_sparsity"] == 0.5   # 8 of 16 train
+            assert st["full"]["trained_per_round"] == 16
             print("SHARDED_OK")
         """)
         env = dict(os.environ,
-                   XLA_FLAGS="--xla_force_host_platform_device_count=6",
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8",
                    PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
         proc = subprocess.run([sys.executable, "-c", script], env=env,
                               capture_output=True, text=True, timeout=540,
@@ -334,6 +349,7 @@ class TestShardedEngine:
     def test_sharded_engine_guards(self):
         spec = ExperimentSpec(
             scenarios=(ScenarioSpec.from_case("iid"),),
-            strategies=("random",), engine="sharded", fl=MICRO)
-        with pytest.raises(ValueError, match="labelwise"):
+            strategies=("random",), engine="sharded", fl=MICRO,
+            aggregation="median")
+        with pytest.raises(ValueError, match="fedavg/fedsgd"):
             run(spec)

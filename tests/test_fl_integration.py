@@ -72,8 +72,10 @@ class TestShardedRound:
         np.testing.assert_array_equal(np.asarray(mask), [0, 0, 1, 1])
 
     def test_sharded_round_matches_masked_mean(self):
-        """On a 1-axis mesh: selected groups' trained params are averaged and
-        broadcast; unselected groups' updates are discarded."""
+        """On a 1-axis mesh: selected clients' trained params are averaged
+        and broadcast; unselected clients' updates are discarded — and the
+        gather-based round trains only the budget (padded to the group
+        count), not the whole fleet."""
         n_dev = jax.device_count()
         mesh = jax.make_mesh((n_dev,), ("clients",))
         num_classes = 4
@@ -85,21 +87,57 @@ class TestShardedRound:
             mesh, "clients", local_step, n_select=1, num_classes=num_classes,
             params_pspec={"w": P()}, batch_pspec={"x": P()},
         )
+        assert round_fn.budget == 1
+        assert round_fn.trained_per_round == n_dev  # padded to group count
         params = {"w": jnp.zeros((3,), jnp.float32)}
         batch = {"x": jnp.arange(n_dev * 2, dtype=jnp.float32).reshape(n_dev, 2)}
-        # one client group has diverse labels (σ²>0), rest single-label
+        # one client has diverse labels (σ²>0), rest single-label
         labels = np.zeros((n_dev, 8), np.int32)
         labels[0, :4] = np.arange(4).repeat(1)
         valid = np.ones((n_dev, 8), bool)
+        key = jax.random.PRNGKey(0)
         new_params, info = round_fn(params, batch,
-                                    jnp.asarray(labels), jnp.asarray(valid))
+                                    jnp.asarray(labels), jnp.asarray(valid),
+                                    key)
         assert float(info["num_selected"]) == 1.0
-        # group 0 was selected; its delta = mean of its x = 0.5
+        # client 0 was selected; its delta = mean of its x = 0.5
         np.testing.assert_allclose(np.asarray(new_params["w"]), 0.5, rtol=1e-6)
 
+    def test_gather_mode_matches_masked_mode(self):
+        """Multi-client-per-group: the gather-based round reproduces the
+        masked-psum baseline exactly while training only B_pad of N clients."""
+        n_dev = jax.device_count()
+        mesh = jax.make_mesh((n_dev,), ("clients",))
+        n_clients = 4 * n_dev
+        rng = np.random.default_rng(0)
+        labels = rng.integers(0, 4, (n_clients, 8)).astype(np.int32)
+        valid = np.ones((n_clients, 8), bool)
+        params = {"w": jnp.zeros((3,), jnp.float32)}
+        batch = {"x": jnp.asarray(rng.normal(size=(n_clients, 2)), jnp.float32)}
+        key = jax.random.PRNGKey(1)
+
+        def local_step(params, batch):
+            return {"w": params["w"] + batch["x"].mean()}
+
+        outs = {}
+        for mode in ("gather", "masked"):
+            rf = make_sharded_fl_round(
+                mesh, "clients", local_step, n_select=2,
+                num_classes=4, params_pspec={"w": P()},
+                batch_pspec={"x": P()}, num_clients=n_clients, mode=mode)
+            outs[mode] = rf(params, batch, jnp.asarray(labels),
+                            jnp.asarray(valid), key)
+            if mode == "gather":
+                assert rf.trained_per_round < n_clients
+                assert rf.flop_sparsity > 0
+        (p_g, i_g), (p_m, i_m) = outs["gather"], outs["masked"]
+        np.testing.assert_allclose(np.asarray(p_g["w"]), np.asarray(p_m["w"]),
+                                   rtol=1e-6)
+        assert float(i_g["num_selected"]) == float(i_m["num_selected"]) == 2.0
+
     def test_sharded_round_availability_mask(self):
-        """with_availability=True: a dark group is excluded from selection
-        even when it is the only σ²>0 group — global params stay put."""
+        """with_availability=True: a dark client is excluded from selection
+        even when it is the only σ²>0 client — global params stay put."""
         n_dev = jax.device_count()
         mesh = jax.make_mesh((n_dev,), ("clients",))
         num_classes = 4
@@ -115,17 +153,20 @@ class TestShardedRound:
         params = {"w": jnp.zeros((3,), jnp.float32)}
         batch = {"x": jnp.arange(n_dev * 2, dtype=jnp.float32).reshape(n_dev, 2)}
         labels = np.zeros((n_dev, 8), np.int32)
-        labels[0, :4] = np.arange(4)          # only group 0 has σ² > 0
+        labels[0, :4] = np.arange(4)          # only client 0 has σ² > 0
         valid = np.ones((n_dev, 8), bool)
-        avail = np.zeros((n_dev,), np.float32)  # ...but every group is dark
+        key = jax.random.PRNGKey(0)
+        avail = np.zeros((n_dev,), np.float32)  # ...but every client is dark
         new_params, info = round_fn(params, batch, jnp.asarray(labels),
-                                    jnp.asarray(valid), jnp.asarray(avail))
+                                    jnp.asarray(valid), key,
+                                    jnp.asarray(avail))
         assert float(info["num_selected"]) == 0.0
         np.testing.assert_allclose(np.asarray(new_params["w"]), 0.0, atol=1e-7)
-        # and with group 0 available again, it is selected as before
+        # and with client 0 available again, it is selected as before
         avail[0] = 1.0
         new_params, info = round_fn(params, batch, jnp.asarray(labels),
-                                    jnp.asarray(valid), jnp.asarray(avail))
+                                    jnp.asarray(valid), key,
+                                    jnp.asarray(avail))
         assert float(info["num_selected"]) == 1.0
         np.testing.assert_allclose(np.asarray(new_params["w"]), 0.5, rtol=1e-6)
 

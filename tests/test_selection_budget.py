@@ -1,0 +1,119 @@
+"""Selection-budget semantics (fast tier).
+
+The budget is the strategy's STATIC training-slot count
+(``SelectionResult.budget``): engines gather ``order[:budget]`` clients into
+local training instead of unconditionally ``clients_per_round``.  These tests
+pin the bugfix headline — ``full`` really trains every valid client, a wide
+registered strategy is not truncated, count<n degradation is unchanged — and
+the single-application availability regression (an unavailable-but-high-σ²
+client is never trained).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import FLConfig
+from repro.core import (SelectionResult, apply_availability, register_strategy,
+                        select_full, select_labelwise, select_random,
+                        selection_budget, topn_mask)
+from repro.fl import run_fl_host, run_grid, simulate
+
+MICRO = FLConfig(num_clients=6, clients_per_round=2, global_epochs=2,
+                 local_epochs=1, batch_size=8, lr=1e-3)
+
+
+def diverse_plan(rounds=2, clients=6, spc=8):
+    """Client 0 has the most diverse labels (highest σ²/n); clients 1..N−1
+    are two-label (valid but lower score)."""
+    plan = np.zeros((rounds, clients, spc), np.int32)
+    plan[:, 0] = np.tile(np.arange(4), spc // 4)[:spc]
+    plan[:, 1:] = np.tile(np.array([0] * (spc // 2) + [1] * (spc - spc // 2),
+                                   np.int32), (rounds, clients - 1, 1))
+    return plan
+
+
+class TestBudgetField:
+    def test_builtin_budgets_are_static(self):
+        hists = jnp.asarray(np.full((6, 4), 2.0, np.float32))
+        key = jax.random.PRNGKey(0)
+        assert select_full(key, hists, 2).budget == 6      # whole population
+        assert select_labelwise(key, hists, 2).budget == 2
+        assert select_random(key, hists, 99).budget == 6   # clamped to N
+        # a strategy that declares no budget falls back to the engine default
+        r = SelectionResult(jnp.zeros(6), jnp.zeros(6),
+                            jnp.arange(6, dtype=jnp.int32))
+        assert r.budget is None
+        assert selection_budget(r, 3, 6) == 3
+        assert selection_budget(select_full(key, hists, 2), 2, 6) == 6
+
+    def test_mask_stays_inside_budget_window(self):
+        hists = jnp.asarray(np.full((6, 4), 2.0, np.float32))
+        r = select_labelwise(jax.random.PRNGKey(0), hists, 2)
+        b = selection_budget(r, 2, 6)
+        assert float(r.mask[np.asarray(r.order[b:])].sum()) == 0.0
+        assert float(r.num_selected) == float(r.mask[np.asarray(r.order[:b])].sum())
+
+
+class TestBudgetSemantics:
+    def test_full_trains_all_valid_clients(self):
+        """'full' documented as "every client" used to train only
+        clients_per_round — the headline bug.  Now it trains all 6, in both
+        the compiled and host engines."""
+        plan = diverse_plan()
+        sim = simulate(plan, MICRO, strategy="full", eval_n_per_class=1)
+        host = run_fl_host(plan, MICRO, strategy="full", eval_n_per_class=1)
+        np.testing.assert_array_equal(sim.num_selected, [6.0, 6.0])
+        np.testing.assert_array_equal(host.num_selected, [6.0, 6.0])
+        np.testing.assert_allclose(sim.loss, host.loss, rtol=2e-4, atol=2e-5)
+
+    def test_wide_strategy_and_degradation_grid(self):
+        """ONE compiled 2-case × 2-strategy grid pins both remaining budget
+        semantics: a registered strategy with budget > clients_per_round
+        trains its declared slot count (no silent cap at n_sel), and
+        Algorithm 1's count<n degradation is unchanged (all-single-label
+        clients → labelwise selects nobody)."""
+        def select_wide5(key, hists, n_select):
+            del key, n_select                      # wants 5 slots, always
+            scores = hists.sum(-1).astype(jnp.float32)
+            mask, order = topn_mask(scores, hists.sum(-1) > 0, 5)
+            return SelectionResult(mask, scores, order, budget=5)
+
+        register_strategy("_wide5", select_wide5, overwrite=True)
+        plans = np.stack([diverse_plan(),
+                          np.zeros((2, 6, 8), np.int32)])  # one-label case
+        grid = run_grid(plans, MICRO, strategies=("labelwise", "_wide5"),
+                        seeds=(0,), eval_n_per_class=1)
+        np.testing.assert_array_equal(grid.num_selected[0, 1, 0], [5.0, 5.0])
+        np.testing.assert_array_equal(grid.num_selected[0, 0, 0], [2.0, 2.0])
+        np.testing.assert_array_equal(grid.num_selected[1, 0, 0], [0.0, 0.0])
+        # host engine honours the wide budget too
+        host = run_fl_host(plans[0], MICRO, strategy="_wide5", rounds=1,
+                           eval_n_per_class=1)
+        np.testing.assert_array_equal(host.num_selected, [5.0])
+
+
+class TestAvailabilitySingleApplication:
+    def test_unavailable_high_var_client_never_trained(self):
+        """Regression for the double availability application in sim's
+        round_body: client 0 has the top σ²/n score but is unavailable — it
+        must never be selected or trained.  The mask-mode trajectory is
+        bit-identical to the composed-plan trajectory (where client 0's data
+        does not even exist), proving zero influence on training."""
+        plan = diverse_plan(rounds=1)
+        dark0 = np.ones((1, 6), np.float32)
+        dark0[:, 0] = 0.0
+        ones = np.ones((1, 6), np.float32)
+        # ONE compiled grid holds all three scenarios: mask-mode dark client,
+        # the composed-plan oracle, and the everyone-available control.
+        plans = np.stack([plan, apply_availability(plan, dark0.astype(bool)),
+                          plan])
+        grid = run_grid(plans, MICRO, strategies=("labelwise",), seeds=(0,),
+                        avail=np.stack([dark0, ones, ones]), rounds=1,
+                        eval_n_per_class=1)
+        masked, composed, free = (grid.num_selected[k, 0, 0] for k in range(3))
+        np.testing.assert_array_equal(masked, [2.0])
+        np.testing.assert_array_equal(masked, composed)
+        np.testing.assert_array_equal(grid.loss[0], grid.loss[1])
+        # ...and with client 0 available it IS the top pick, changing training
+        assert not np.array_equal(grid.loss[2], grid.loss[0])
