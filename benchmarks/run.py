@@ -22,6 +22,7 @@ SUITES = [
     ("fig10_table2_proportion", "benchmarks.fig10_table2_proportion"),
     ("dirichlet_ablation", "benchmarks.dirichlet_ablation"),
     ("sim_grid", "benchmarks.sim_grid"),
+    ("workload_grid", "benchmarks.workload_grid"),
     ("sharded_round", "benchmarks.sharded_round"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
@@ -38,11 +39,17 @@ def main(argv=None) -> int:
                     help="only run the gather-based vs masked-psum SPMD "
                          "round comparison (8/16/32 emulated devices) and "
                          "emit BENCH_sharded_round.json")
+    ap.add_argument("--workload-grid", action="store_true",
+                    help="only run the per-workload (cnn vs lm) compiled "
+                         "grid vs host-loop comparison and emit "
+                         "BENCH_workloads.json")
     args = ap.parse_args(argv)
     if args.sim_grid:
         args.only = "sim_grid"
     if args.sharded_round:
         args.only = "sharded_round"
+    if args.workload_grid:
+        args.only = "workload_grid"
     if args.only and args.only not in {n for n, _ in SUITES}:
         ap.error(f"unknown suite {args.only!r}; have "
                  f"{sorted(n for n, _ in SUITES)}")

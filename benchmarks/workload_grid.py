@@ -1,0 +1,107 @@
+"""BENCH_workloads: per-workload round cost, compiled grid vs host loop.
+
+For every registered builtin workload (cnn — the paper model — and lm — the
+micro transformer over domain-skewed token streams) the same micro scenario
+grid runs through (a) the compiled vmapped engine as ONE XLA program and
+(b) one measured host-loop trial projected across the grid (the host loop
+re-jits per trial; its warm-up is recorded but excluded from the projection,
+mirroring BENCH_sim_grid's auditable-arithmetic protocol).  This is the
+registry's perf receipt: opening a new model family to the grid costs zero
+engine edits AND keeps the compiled engine's structural win.
+
+Output: ``BENCH_workloads.json`` at the repo root + the usual CSV lines.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs.paper_cnn import FLConfig
+from repro.fl import ExperimentSpec, ScenarioSpec, run, run_fl_host
+from .common import emit
+
+WORKLOADS = ("cnn", "lm")
+STRATEGIES_2 = ("random", "labelwise")
+CASES_2 = ("iid", "case2b")
+N_SEEDS = 2
+SPC = 4
+EVAL_N = 1
+
+GRID_FL = FLConfig(num_clients=8, clients_per_round=2, global_epochs=2,
+                   local_epochs=1, batch_size=4, lr=1e-3)
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                        "BENCH_workloads.json")
+
+
+def _spec(workload: str, n_seeds: int) -> ExperimentSpec:
+    return ExperimentSpec(
+        scenarios=tuple(
+            ScenarioSpec.from_case(c, per_seed_plans=True,
+                                   samples_per_client=SPC,
+                                   majority=int(SPC * 200 / 290))
+            for c in CASES_2),
+        strategies=STRATEGIES_2, seeds=tuple(range(n_seeds)), engine="sim",
+        workload=workload, fl=GRID_FL, eval_n_per_class=EVAL_N)
+
+
+def main(fast: bool = True) -> dict:
+    n_seeds = N_SEEDS if fast else 3 * N_SEEDS
+    n_trials = len(CASES_2) * len(STRATEGIES_2) * n_seeds
+    rounds = GRID_FL.global_epochs
+    report: dict = {"grid": {"cases": list(CASES_2),
+                             "strategies": list(STRATEGIES_2),
+                             "seeds": n_seeds, "trials": n_trials,
+                             "rounds": rounds,
+                             "clients": GRID_FL.num_clients,
+                             "samples_per_client": SPC},
+                    "workloads": {}}
+
+    for wname in WORKLOADS:
+        spec = _spec(wname, n_seeds)
+        res = run(spec)
+        sim_total = res.wall_s + res.compile_s
+
+        # Host projection: one warm-up trial (excluded) + one measured trial.
+        lowered = spec.scenarios[0].lower(GRID_FL, spec.seeds, rounds)
+        plan = lowered.composed_plan(0)
+        t0 = time.perf_counter()
+        run_fl_host(plan, GRID_FL, strategy=STRATEGIES_2[0], seed=0,
+                    eval_n_per_class=EVAL_N, workload=wname)
+        warmup = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run_fl_host(plan, GRID_FL, strategy=STRATEGIES_2[1], seed=1,
+                    eval_n_per_class=EVAL_N, workload=wname)
+        host_trial = time.perf_counter() - t0
+        host_projected = warmup + host_trial * (n_trials - 1)
+
+        report["workloads"][wname] = {
+            "sim": {"compile_s": res.compile_s, "exec_s": res.wall_s,
+                    "total_s": sim_total,
+                    "s_per_round": sim_total / (n_trials * rounds)},
+            "host": {"warmup_trial_s": warmup, "s_per_trial": host_trial,
+                     "s_per_round": host_trial / rounds,
+                     "projected_total_s": host_projected,
+                     "projection": "warmup + s_per_trial * (trials - 1)"},
+            "speedup_vs_host": host_projected / sim_total,
+            "mean_final_accuracy": float(res.final_accuracy.mean()),
+        }
+        emit(f"workload_grid/{wname}_compiled",
+             sim_total / (n_trials * rounds) * 1e6,
+             f"trials={n_trials} total={sim_total:.1f}s "
+             f"compile={res.compile_s:.1f}s")
+        emit(f"workload_grid/{wname}_host_round", host_trial / rounds * 1e6,
+             f"projected_total={host_projected:.1f}s "
+             f"speedup={host_projected / sim_total:.2f}x")
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("workload_grid/report", 0.0, f"-> {OUT_PATH}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

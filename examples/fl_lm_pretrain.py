@@ -4,24 +4,26 @@ clustering over domain-skewed token streams (DESIGN.md §5's LM mapping —
 
     PYTHONPATH=src python examples/fl_lm_pretrain.py [rounds]
 
-Each FL client holds token sequences drawn from a skewed mixture of vocab-band
-domains; the server selects clients whose *domain histograms* approximate
-uniform (Algorithm 1 verbatim, just with domains as labels), trains only
-those, and aggregates.  Demonstrates the paper's technique is architecture-
-agnostic: the same core/ machinery drives the CNN experiments and this LM.
+A living doc of the workload registry: the hand-rolled host loop this file
+used to carry is gone — we register a 12M-param transformer as an LM
+workload (repro.fl.workloads.lm_workload), declare the domain-skew scenario
+as data, and ``run`` dispatches the whole thing through the COMPILED engine
+(the same lax.scan/vmap grid the CNN experiments use).  Each FL client holds
+token sequences drawn from a skewed mixture of vocab-band domains; the
+server selects clients whose *domain histograms* approximate uniform
+(Algorithm 1 verbatim, just with domains as labels), trains only those, and
+aggregates — the labelwise column should out-converge the random baseline on
+the held-out uniform-domain stream.
 """
 import sys
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import get_strategy, histogram, fedavg_aggregate, interpolate
-from repro.data import TokenDataset
-from repro.models import init_model, loss_fn
+from repro.configs.paper_cnn import FLConfig
+from repro.fl import (ExperimentSpec, ScenarioSpec, lm_workload,
+                      register_workload, run)
 from repro.models.config import ModelConfig
-from repro.optim import adam, apply_updates
 
 CFG = ModelConfig(name="fl-lm-12m", arch_type="dense", num_layers=4,
                   d_model=256, num_heads=4, num_kv_heads=2, d_ff=512,
@@ -29,73 +31,48 @@ CFG = ModelConfig(name="fl-lm-12m", arch_type="dense", num_layers=4,
                   scan_layers=False)
 
 N_CLIENTS, N_SELECT, N_DOMAINS = 16, 6, 8
-SEQS_PER_CLIENT, LOCAL_STEPS = 8, 2
+SEQS_PER_CLIENT, LOCAL_EPOCHS = 8, 2
+
+# One line opens the LM scenario family to every engine: the registered
+# bundle carries init/loss/eval for CFG and the domain-conditioned
+# TokenDataset materializer.
+register_workload("lm-12m",
+                  lm_workload(CFG, num_domains=N_DOMAINS, seq_len=64),
+                  overwrite=True)
 
 
-def client_domains(rng, p_bias=0.7):
-    """Domain plan: biased clients sample one domain; others mix uniformly."""
-    out = np.zeros((N_CLIENTS, SEQS_PER_CLIENT), np.int32)
-    for i in range(N_CLIENTS):
-        if rng.random() < p_bias:
-            out[i] = rng.integers(0, N_DOMAINS)
-        else:
-            out[i] = rng.integers(0, N_DOMAINS, SEQS_PER_CLIENT)
-    return out
-
-
-def main(rounds: int = 30):
-    ds = TokenDataset(num_domains=N_DOMAINS, vocab_size=CFG.vocab_size,
-                      seq_len=64)
-    key = jax.random.PRNGKey(0)
-    params, _ = init_model(key, CFG)
-    opt = adam(1e-3)
-    strategy = get_strategy("labelwise")
-    rng = np.random.default_rng(0)
-
-    def local_train(p, toks):
-        st = opt.init(p)
-        def one(carry, _):
-            p, st = carry
-            def l(pp):
-                batch = {"tokens": toks,
-                         "targets": jnp.roll(toks, -1, 1).at[:, -1].set(-1)}
-                return loss_fn(pp, CFG, batch)[0]
-            loss, g = jax.value_and_grad(l)(p)
-            ups, st = opt.update(g, st, p)
-            return (apply_updates(p, ups), st), loss
-        (p, _), losses = jax.lax.scan(one, (p, st), None, length=LOCAL_STEPS)
-        return p, losses[-1]
-
-    @jax.jit
-    def fl_round(params, all_toks, hists, k):
-        sel = strategy(k, hists, N_SELECT)
-        idx = sel.order[:N_SELECT]
-        live = sel.mask[idx]
-        trained, losses = jax.vmap(lambda t: local_train(params, t))(all_toks[idx])
-        agg = fedavg_aggregate(trained, live)
-        return interpolate(params, agg), (losses * live).sum() / jnp.maximum(live.sum(), 1)
-
-    # held-out eval: uniform-domain stream perplexity
-    eval_toks = ds.sample(jax.random.PRNGKey(99),
-                          jnp.arange(16) % N_DOMAINS)
-    eval_batch = {"tokens": eval_toks,
-                  "targets": jnp.roll(eval_toks, -1, 1).at[:, -1].set(-1)}
-    eval_jit = jax.jit(lambda p: loss_fn(p, CFG, eval_batch)[0])
+def main(rounds: int = 10):
+    fl = FLConfig(num_clients=N_CLIENTS, clients_per_round=N_SELECT,
+                  global_epochs=rounds, local_epochs=LOCAL_EPOCHS,
+                  batch_size=SEQS_PER_CLIENT, lr=1e-3)
+    spec = ExperimentSpec(
+        # Figs. 6–7 partitioner with domains as the label space: P(client
+        # fully domain-biased) = 0.7, fresh draw every round — the same
+        # non-IID machinery the CNN grids use, nothing LM-specific.
+        scenarios=(ScenarioSpec.from_bias_mix(
+            0.7, name="domain-skew", num_classes=N_DOMAINS,
+            n_min=SEQS_PER_CLIENT, n_max=SEQS_PER_CLIENT,
+            num_rounds=rounds),),
+        strategies=("labelwise", "random"),
+        seeds=(0,), engine="sim", workload="lm-12m", fl=fl,
+        eval_n_per_class=2)
 
     t0 = time.time()
-    for t in range(rounds):
-        kt = jax.random.fold_in(key, t)
-        domains = client_domains(rng)
-        toks = ds.sample(kt, jnp.asarray(domains))       # (N, seqs, S)
-        hists = histogram(jnp.asarray(domains), N_DOMAINS)
-        params, client_loss = fl_round(params, toks, hists, kt)
-        if t % 5 == 0 or t == rounds - 1:
-            ev = float(eval_jit(params))
-            print(f"round {t:3d}  client_loss={float(client_loss):.4f}  "
-                  f"eval_nll={ev:.4f}  ppl={np.exp(min(ev, 20)):.1f}  "
-                  f"({(time.time() - t0):.0f}s)", flush=True)
+    res = run(spec)
+    wall = time.time() - t0
+    print(f"compiled grid: {rounds} rounds x {len(spec.strategies)} "
+          f"strategies in {wall:.0f}s (compile {res.compile_s:.0f}s "
+          f"+ exec {res.wall_s:.0f}s)")
+    for strat in spec.strategies:
+        traj = res.trajectory("domain-skew", strat, seed=0)
+        nll = traj["loss"][-1]
+        print(f"  {strat:10s}: eval_nll={nll:.4f} "
+              f"ppl={np.exp(min(float(nll), 20)):.1f} "
+              f"next-tok acc={traj['accuracy'][-1]:.3f} "
+              f"selected/round={traj['num_selected'].mean():.1f}")
     print("done.")
+    return res
 
 
 if __name__ == "__main__":
-    main(int(sys.argv[1]) if len(sys.argv) > 1 else 30)
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 10)

@@ -35,12 +35,22 @@ def materialize_round(ds: ImageDataset, plan_t: Union[np.ndarray, Array],
     return {"images": images, "labels": labels, "valid": valid, "hists": hists}
 
 
-def client_batches(data: Dict[str, Array], batch_size: int) -> Dict[str, Array]:
+def client_batches(data: Dict[str, Array], batch_size: int,
+                   keys=None) -> Dict[str, Array]:
     """Reshape (N, n_max, ...) → (N, n_batches, batch_size, ...), padding the
-    tail with invalid rows so every client has identical batch structure."""
+    tail with invalid rows so every client has identical batch structure.
+
+    Workload-agnostic: ``keys`` names the per-sample payload leaves to fold
+    (a workload's static ``batch_keys`` — images, token sequences, labels,
+    validity, …); the engines pass it so per-client summary leaves such as
+    ``"hists"`` never enter the batch grid.  ``keys=None`` folds every leaf
+    except ``"hists"`` (the pre-registry behavior).  Padded samples are
+    masked by the padded ``valid`` leaf (False), so fill values never reach
+    a loss."""
     n, n_max = data["labels"].shape
     nb = -(-n_max // batch_size)
     pad = nb * batch_size - n_max
+    keys = tuple(k for k in data if k != "hists") if keys is None else keys
 
     def prep(x, fill):
         if pad:
@@ -48,8 +58,5 @@ def client_batches(data: Dict[str, Array], batch_size: int) -> Dict[str, Array]:
             x = jnp.pad(x, width, constant_values=fill)
         return x.reshape((n, nb, batch_size) + x.shape[2:])
 
-    return {
-        "images": prep(data["images"], 0),
-        "labels": prep(data["labels"], 0),   # padded labels masked by valid
-        "valid": prep(data["valid"], False),
-    }
+    return {k: prep(data[k], False if data[k].dtype == jnp.bool_ else 0)
+            for k in keys}

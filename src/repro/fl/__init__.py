@@ -1,5 +1,7 @@
 from .client import local_train, local_gradient
 from .round import make_fl_round
+from .workloads import (Workload, get_workload, lm_workload, register_workload,
+                        registered_workloads)
 from .loop import run_fl, run_fl_host, FLHistory, success_rate, cnn_batch_loss
 from .sharded import make_sharded_fl_round, topn_mask_from_scores
 from .sim import (GridResult, grid_arrays, make_trial_fn, run_grid, simulate,
@@ -12,6 +14,8 @@ from repro.core import register_strategy, registered_strategies
 
 __all__ = ["local_train", "local_gradient", "make_fl_round", "run_fl",
            "run_fl_host", "FLHistory", "success_rate", "cnn_batch_loss",
+           "Workload", "get_workload", "lm_workload", "register_workload",
+           "registered_workloads",
            "make_sharded_fl_round", "topn_mask_from_scores",
            "GridResult", "grid_arrays", "make_trial_fn", "run_grid",
            "simulate", "stack_case_plans", "strategy_id",

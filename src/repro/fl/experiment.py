@@ -17,8 +17,14 @@ call-site.  Here the whole experiment is DATA:
     res.table1(); res.success_rate()        # paper renderers
     res.to_json()                           # round-trips via from_json
 
-Three orthogonal registries make every axis pluggable without engine edits:
+Four orthogonal registries make every axis pluggable without engine edits:
 
+* **workloads** — ``repro.fl.workloads.register_workload(name, Workload)``:
+  what each client trains ("cnn" — the paper model — or "lm" — a micro
+  transformer over domain-skewed token streams — out of the box); every
+  engine resolves ``spec.workload`` and compiles the bundle's traced
+  init/materialize/loss/eval fns, so a new model family needs no engine
+  edits.
 * **strategies** — ``repro.core.selection.register_strategy(name, fn)``; the
   registered callable compiles straight into the simulator's traced
   stack+index dispatch (repro.fl.sim._select) and ids are append-only, so
@@ -358,7 +364,8 @@ class LoweredScenario:
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class ExperimentSpec:
-    """The full grid: scenarios × strategies × seeds × aggregation × engine."""
+    """The full grid: scenarios × strategies × seeds × aggregation × engine
+    × workload (the registered client model family — repro.fl.workloads)."""
     scenarios: Tuple[ScenarioSpec, ...]
     strategies: Tuple[str, ...] = ("labelwise",)
     seeds: Tuple[int, ...] = (0,)
@@ -367,6 +374,7 @@ class ExperimentSpec:
     aggregation: Optional[str] = None
     rounds: Optional[int] = None
     eval_n_per_class: int = 50
+    workload: str = "cnn"
 
     @property
     def num_rounds(self) -> int:
@@ -387,6 +395,8 @@ class ExperimentSpec:
         if self.engine not in _ENGINES:
             raise KeyError(f"unknown engine {self.engine!r}; have "
                            f"{engines()}")
+        from .workloads import get_workload
+        get_workload(self.workload)  # unknown workloads raise pre-compile
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -395,6 +405,7 @@ class ExperimentSpec:
             "engine": self.engine, "fl": dataclasses.asdict(self.fl),
             "aggregation": self.aggregation, "rounds": self.rounds,
             "eval_n_per_class": self.eval_n_per_class,
+            "workload": self.workload,
         }
 
     @classmethod
@@ -406,7 +417,8 @@ class ExperimentSpec:
             engine=d.get("engine", "sim"),
             fl=FLConfig(**d["fl"]) if "fl" in d else FLConfig(),
             aggregation=d.get("aggregation"), rounds=d.get("rounds"),
-            eval_n_per_class=d.get("eval_n_per_class", 50))
+            eval_n_per_class=d.get("eval_n_per_class", 50),
+            workload=d.get("workload", "cnn"))
 
 
 @dataclasses.dataclass
@@ -600,7 +612,8 @@ def _engine_sim(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
     res = grid_arrays(plans, spec.fl, strategies=spec.strategies,
                       seeds=spec.seeds, aggregation=spec.aggregation,
                       rounds=spec.rounds, ds=ds, avail=avail,
-                      eval_n_per_class=spec.eval_n_per_class)
+                      eval_n_per_class=spec.eval_n_per_class,
+                      workload=spec.workload)
     return res.accuracy, res.loss, res.num_selected, res.wall_s, res.compile_s
 
 
@@ -620,7 +633,8 @@ def _engine_host(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
                 h = run_fl_host(plan, spec.fl, strategy=strat,
                                 aggregation=spec.aggregation,
                                 rounds=spec.rounds, ds=ds, seed=seed,
-                                eval_n_per_class=spec.eval_n_per_class)
+                                eval_n_per_class=spec.eval_n_per_class,
+                                workload=spec.workload)
                 acc[k, s, r] = h.accuracy
                 loss[k, s, r] = h.loss
                 nsel[k, s, r] = h.num_selected
@@ -641,16 +655,21 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     when there are enough devices; emulate more with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  Realized FLOP
     sparsity per strategy (1 − trained/N) is reported in the result's
-    ``meta["sharded"]``."""
+    ``meta["sharded"]``.
+
+    Workload-agnostic: ``spec.workload`` resolves the client model family —
+    its ``param_shapes`` metadata sizes the replicated parameter
+    PartitionSpec tree and its static ``batch_keys`` size the client-sharded
+    batch specs, so the round trains whichever pytree the workload declares."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
 
-    from repro.data import ImageDataset, client_batches, materialize_round
-    from repro.models import cnn_init, cnn_loss
+    from repro.data import client_batches
     from repro.optim import get_optimizer
     from .client import local_gradient, local_train
     from .sharded import make_sharded_fl_round
+    from .workloads import get_workload
 
     cfg = spec.fl
     agg = spec.aggregation or cfg.aggregation
@@ -662,15 +681,14 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     groups = (n_clients if ndev >= n_clients else
               max(g for g in range(1, ndev + 1) if n_clients % g == 0))
 
-    ds = ds or ImageDataset()
+    wl = get_workload(spec.workload)
+    ds = wl.dataset(ds)
     mesh = jax.make_mesh((groups,), ("clients",))
     opt = get_optimizer(cfg.optimizer, cfg.lr)
-    test_x, test_y = ds.test_set(spec.eval_n_per_class)
-    eval_jit = jax.jit(lambda p: cnn_loss(p, test_x, test_y))
-
-    def loss_fn(params, batch):
-        return cnn_loss(params, batch["images"], batch["labels"],
-                        batch["valid"])
+    eval_batch = wl.eval_set(ds, spec.eval_n_per_class)
+    eval_fn = wl.make_eval(ds)
+    eval_jit = jax.jit(lambda p: eval_fn(p, eval_batch))
+    loss_fn = wl.make_loss(ds)
 
     if agg == "fedavg":
         server_lr = cfg.server_lr
@@ -694,34 +712,29 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     loss = np.zeros_like(acc)
     nsel = np.zeros_like(acc)
     t0 = time.perf_counter()
-    pspec = jax.tree_util.tree_map(
-        lambda _: P(),
-        jax.eval_shape(lambda k: cnn_init(k, num_classes=ds.num_classes,
-                                          image_size=ds.image_size,
-                                          channels=ds.channels),
-                       jax.random.PRNGKey(0)))
+    # The workload's static shape metadata: params replicated across the
+    # client mesh axis, one client-sharded PartitionSpec per batch leaf.
+    pspec = jax.tree_util.tree_map(lambda _: P(), wl.param_shapes(ds))
     round_fns = {
         strat: make_sharded_fl_round(
             mesh, "clients", local_step, n_select=cfg.clients_per_round,
-            num_classes=ds.num_classes, params_pspec=pspec,
-            batch_pspec={"images": P(), "labels": P(), "valid": P()},
+            num_classes=wl.num_classes(ds), params_pspec=pspec,
+            batch_pspec={k: P() for k in wl.batch_keys},
             num_clients=n_clients, strategy=strat, server_lr=server_lr)
         for strat in spec.strategies}
     for k, low in enumerate(lowered):
         for r, seed in enumerate(spec.seeds):
             plan = low.composed_plan(r)
             key = jax.random.PRNGKey(int(seed))
-            init = cnn_init(jax.random.fold_in(key, 1),
-                            num_classes=ds.num_classes,
-                            image_size=ds.image_size, channels=ds.channels)
+            init = wl.init(jax.random.fold_in(key, 1), ds)
             params = {strat: init for strat in spec.strategies}
             for t in range(t_n):
                 # Round data and keys depend only on (scenario, seed, round)
                 # — materialize once and step every strategy's own params.
                 kt = jax.random.fold_in(key, 1000 + t)
-                data = materialize_round(ds, plan[t % plan.shape[0]],
-                                         jax.random.fold_in(kt, 0))
-                batches = client_batches(data, cfg.batch_size)
+                data = wl.materialize(ds, plan[t % plan.shape[0]],
+                                      jax.random.fold_in(kt, 0))
+                batches = client_batches(data, cfg.batch_size, wl.batch_keys)
                 k_sel = jax.random.fold_in(kt, 1)
                 for s, strat in enumerate(spec.strategies):
                     params[strat], info = round_fns[strat](

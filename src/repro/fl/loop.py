@@ -25,9 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import plan_round
-from repro.data import ImageDataset, client_batches, materialize_round
-from repro.models import cnn_init, cnn_loss
+from repro.data import client_batches
+from repro.models import cnn_loss
 from .round import make_fl_round
+from .workloads import Workload, get_workload
 
 Array = jax.Array
 PyTree = Any
@@ -50,6 +51,8 @@ class FLHistory:
 
 
 def cnn_batch_loss(params: PyTree, batch: Dict[str, Array]):
+    # Back-compat alias for the pre-registry loss plumbing; the loops below
+    # resolve the equivalent callable through the workload registry.
     return cnn_loss(params, batch["images"], batch["labels"], batch["valid"])
 
 
@@ -60,16 +63,18 @@ def evaluate_cnn(params: PyTree, test_images: Array, test_labels: Array):
 
 def run_fl(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
            aggregation: Optional[str] = None, rounds: Optional[int] = None,
-           ds: Optional[ImageDataset] = None, seed: Optional[int] = None,
+           ds=None, seed: Optional[int] = None,
            verbose: bool = False, engine: str = "sim",
            avail: Optional[np.ndarray] = None,
-           eval_n_per_class: int = 50) -> FLHistory:
-    """Run FL on the paper CNN over a non-IID label plan.  Returns history.
+           eval_n_per_class: int = 50, workload: str = "cnn") -> FLHistory:
+    """Run FL over a non-IID label plan.  Returns history.
 
     Thin shim over the declarative surface (repro.fl.experiment): the plan
     becomes a single explicit-plan ScenarioSpec and ``engine`` picks the
     runner from the engine registry ("sim" compiled grid, "host" legacy loop,
-    "sharded" SPMD)."""
+    "sharded" SPMD).  ``workload`` names the registered client workload
+    (repro.fl.workloads) — "cnn" (the paper model, default) or any other
+    registered bundle such as "lm"."""
     from . import experiment
     scenario = experiment.ScenarioSpec.from_plan("scenario", plan, avail=avail)
     spec = experiment.ExperimentSpec(
@@ -77,7 +82,7 @@ def run_fl(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
         strategies=(strategy or fl_cfg.selection,),
         seeds=(fl_cfg.seed if seed is None else seed,),
         engine=engine, fl=fl_cfg, aggregation=aggregation, rounds=rounds,
-        eval_n_per_class=eval_n_per_class)
+        eval_n_per_class=eval_n_per_class, workload=workload)
     res = experiment.run(spec, ds=ds)
     traj = res.trajectory(scenario.name, spec.strategies[0], spec.seeds[0])
     hist = FLHistory([float(a) for a in traj["accuracy"]],
@@ -94,27 +99,33 @@ def run_fl(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
 
 def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
                 aggregation: Optional[str] = None, rounds: Optional[int] = None,
-                ds: Optional[ImageDataset] = None, seed: Optional[int] = None,
-                verbose: bool = False, eval_n_per_class: int = 50) -> FLHistory:
-    """Legacy host-driven loop: one jitted round per step, eval on host."""
-    ds = ds or ImageDataset()
+                ds=None, seed: Optional[int] = None,
+                verbose: bool = False, eval_n_per_class: int = 50,
+                workload: "str | Workload" = "cnn") -> FLHistory:
+    """Legacy host-driven loop: one jitted round per step, eval on host.
+
+    The parity oracle generalizes over the same workload registry as the
+    compiled engine, so host≡sim trajectory pins hold per workload."""
+    wl = get_workload(workload)
+    ds = wl.dataset(ds)
     seed = fl_cfg.seed if seed is None else seed
     # `is None`, not falsy-or: rounds=0 is a zero-round dry-run (empty
     # history), not a request for the full schedule.
     rounds = fl_cfg.global_epochs if rounds is None else rounds
     key = jax.random.PRNGKey(seed)
-    params = cnn_init(jax.random.fold_in(key, 1), num_classes=ds.num_classes,
-                      image_size=ds.image_size, channels=ds.channels)
-    fl_round = make_fl_round(cnn_batch_loss, fl_cfg, strategy, aggregation)
-    test_x, test_y = ds.test_set(eval_n_per_class)
-    eval_jit = jax.jit(lambda p: cnn_loss(p, test_x, test_y))
+    params = wl.init(jax.random.fold_in(key, 1), ds)
+    fl_round = make_fl_round(wl.make_loss(ds), fl_cfg, strategy, aggregation)
+    eval_batch = wl.eval_set(ds, eval_n_per_class)
+    eval_fn = wl.make_eval(ds)
+    eval_jit = jax.jit(lambda p: eval_fn(p, eval_batch))
 
     hist_acc, hist_loss, hist_sel = [], [], []
     t0 = time.time()
     for t in range(rounds):
         kt = jax.random.fold_in(key, 1000 + t)
-        data = materialize_round(ds, plan_round(plan, t), jax.random.fold_in(kt, 0))
-        batches = client_batches(data, fl_cfg.batch_size)
+        data = wl.materialize(ds, plan_round(plan, t),
+                              jax.random.fold_in(kt, 0))
+        batches = client_batches(data, fl_cfg.batch_size, wl.batch_keys)
         params, info = fl_round(params, batches, data["hists"],
                                 jax.random.fold_in(kt, 1))
         loss, m = eval_jit(params)

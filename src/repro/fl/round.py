@@ -42,8 +42,12 @@ def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
     (below) and the compiled simulator (repro.fl.sim), so a change here
     cannot desynchronize the two engines.
 
-    data_sel: leaves (n_sel, n_batches, batch_size, ...); live: (n_sel,) 0/1.
-    Returns (new_global_params, per-client metrics).
+    Workload-agnostic: ``loss_fn`` and the ``data_sel`` payload come from the
+    workload registry (repro.fl.workloads); the only leaf this round math
+    names is ``"valid"`` — the per-sample validity mask every workload's
+    materializer must emit — whose per-client sums are the FedAvg n_i
+    weights.  data_sel: leaves (n_sel, n_batches, batch_size, ...); live:
+    (n_sel,) 0/1.  Returns (new_global_params, per-client metrics).
     """
     n_sel = live.shape[0]
     sizes = data_sel["valid"].reshape(n_sel, -1).sum(-1).astype(jnp.float32)

@@ -41,6 +41,12 @@ identical registry selection (same tie-breaking), identical ``local_step``
 math, and the weighted delta mean equals fedavg-then-interpolate
 algebraically, so host/sim/sharded trajectories agree to float tolerance
 (pinned by tests/test_experiment.py).
+
+The round is workload-agnostic by construction: ``local_step``,
+``params_pspec`` and ``batch_pspec`` describe whatever pytree the client
+trains — the sharded engine (repro.fl.experiment._engine_sharded) derives
+all three from the workload registry (repro.fl.workloads), so registered LM
+clients shard and train through the same collective schedule as the CNN.
 """
 from __future__ import annotations
 

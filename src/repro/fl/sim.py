@@ -25,6 +25,12 @@ Scenario transforms compose: plans may carry −1 padding from
 ``quantity_skew`` / ``apply_availability`` (repro.core.noniid), and
 ``avail`` threads a (T, N) availability mask into selection on-device —
 an unavailable client reports an empty histogram and cannot be selected.
+
+The engine is workload-agnostic: what each client trains (the paper CNN, an
+LM over domain-skewed token streams, …) comes from the workload registry
+(repro.fl.workloads) — ``workload=`` names a registered bundle whose traced
+init/materialize/loss/eval compile into the scan body.  This module contains
+no model- or dataset-specific code.
 """
 from __future__ import annotations
 
@@ -37,10 +43,10 @@ import numpy as np
 
 from repro.core import (STRATEGIES, registered_strategies, selection_budget,
                         strategy_id)
-from repro.data import ImageDataset, client_batches, materialize_round
-from repro.models import cnn_init, cnn_loss
+from repro.data import client_batches
 from repro.optim import get_optimizer
 from .round import client_update_step
+from .workloads import Workload, get_workload
 
 Array = jax.Array
 PyTree = Any
@@ -115,11 +121,12 @@ def _select(sid: Array, key: Array, hists: Array, n_sel: int,
     return masks[sid], scores[sid], orders[sid], budget
 
 
-def make_trial_fn(fl_cfg, ds: Optional[ImageDataset] = None, *,
+def make_trial_fn(fl_cfg, ds=None, *,
                   aggregation: Optional[str] = None,
                   rounds: Optional[int] = None,
                   eval_n_per_class: int = 50,
-                  strategies: Optional[Sequence[str]] = None):
+                  strategies: Optional[Sequence[str]] = None,
+                  workload: "str | Workload" = "cnn"):
     """Build ``trial(plan, sid, seed, avail) -> (acc, loss, nsel, msum)`` —
     one FL trial as a pure jit/vmap-able function of device arrays.
 
@@ -132,8 +139,14 @@ def make_trial_fn(fl_cfg, ds: Optional[ImageDataset] = None, *,
     clients trained (``live.sum()``), and the selection mask sum — the last
     two must be equal (the budget invariant; ``simulate``/``grid_arrays``
     assert it after execution).
+
+    ``workload`` names a registered client workload (repro.fl.workloads) — or
+    is a Workload instance — whose traced init/materialize/loss/eval fns are
+    compiled into the scan body; this engine contains no workload-specific
+    code.  ``ds`` overrides the workload's default dataset.
     """
-    ds = ds or ImageDataset()
+    wl = get_workload(workload)
+    ds = wl.dataset(ds)
     universe = (tuple(strategies) if strategies is not None
                 else registered_strategies())
     for name in universe:
@@ -144,16 +157,14 @@ def make_trial_fn(fl_cfg, ds: Optional[ImageDataset] = None, *,
     # (empty trajectories), not a request for the full schedule.
     num_rounds = fl_cfg.global_epochs if rounds is None else rounds
     opt = get_optimizer(fl_cfg.optimizer, fl_cfg.lr)
-    test_x, test_y = ds.test_set(eval_n_per_class)
-
-    def loss_fn(params, batch):
-        return cnn_loss(params, batch["images"], batch["labels"], batch["valid"])
+    loss_fn = wl.make_loss(ds)
+    eval_batch = wl.eval_set(ds, eval_n_per_class)
+    eval_fn = wl.make_eval(ds)
 
     def trial(plan: Array, sid: Array, seed: Array, avail: Array):
         t_static = plan.shape[0]
         key = jax.random.PRNGKey(seed)
-        params = cnn_init(jax.random.fold_in(key, 1), num_classes=ds.num_classes,
-                          image_size=ds.image_size, channels=ds.channels)
+        params = wl.init(jax.random.fold_in(key, 1), ds)
 
         def round_body(params, t):
             # Same fold_in tree as the host loop — parity is bit-for-bit in
@@ -163,13 +174,13 @@ def make_trial_fn(fl_cfg, ds: Optional[ImageDataset] = None, *,
                                                   keepdims=False)
             avail_t = jax.lax.dynamic_index_in_dim(avail, t % avail.shape[0], 0,
                                                    keepdims=False)
-            data = materialize_round(ds, plan_t, jax.random.fold_in(kt, 0))
+            data = wl.materialize(ds, plan_t, jax.random.fold_in(kt, 0))
             # Availability is applied ONCE, here: a dark client reports an
             # empty histogram, so every registry strategy's validity gate
             # excludes it.  (The old second application — re-masking `live`
             # with avail_t[idx] — was redundant with this and is gone.)
             hists = data["hists"] * avail_t[:, None]
-            batches = client_batches(data, fl_cfg.batch_size)
+            batches = client_batches(data, fl_cfg.batch_size, wl.batch_keys)
             mask, scores, order, budget = _select(
                 sid, jax.random.fold_in(kt, 1), hists, n_sel, universe)
             # Enforce the registry validity contract engine-side: a client
@@ -184,7 +195,7 @@ def make_trial_fn(fl_cfg, ds: Optional[ImageDataset] = None, *,
             new_params, m = client_update_step(params, data_sel, live,
                                                loss_fn, opt, fl_cfg, agg_kind)
 
-            ev_loss, ev_m = cnn_loss(new_params, test_x, test_y)
+            ev_loss, ev_m = eval_fn(new_params, eval_batch)
             return new_params, (ev_m["accuracy"], ev_loss, live.sum(),
                                 mask.sum())
 
@@ -211,15 +222,16 @@ def _assert_budget_invariant(nsel, msum) -> None:
 
 def simulate(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
              aggregation: Optional[str] = None, rounds: Optional[int] = None,
-             ds: Optional[ImageDataset] = None, seed: Optional[int] = None,
+             ds=None, seed: Optional[int] = None,
              avail: Optional[np.ndarray] = None,
-             eval_n_per_class: int = 50) -> GridResult:
+             eval_n_per_class: int = 50,
+             workload: "str | Workload" = "cnn") -> GridResult:
     """One FL trial through the compiled engine (host-loop-compatible knobs)."""
     import time
     name = strategy or fl_cfg.selection
     trial = make_trial_fn(fl_cfg, ds, aggregation=aggregation, rounds=rounds,
                           eval_n_per_class=eval_n_per_class,
-                          strategies=(name,))
+                          strategies=(name,), workload=workload)
     sid = jnp.int32(0)      # single-entry universe → direct call inside
     seed = fl_cfg.seed if seed is None else seed
     av = (jnp.asarray(avail, jnp.float32) if avail is not None
@@ -239,9 +251,10 @@ def simulate(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
 
 def run_grid(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
              seeds: Sequence[int], aggregation: Optional[str] = None,
-             rounds: Optional[int] = None, ds: Optional[ImageDataset] = None,
+             rounds: Optional[int] = None, ds=None,
              avail: Optional[np.ndarray] = None,
-             eval_n_per_class: int = 50) -> GridResult:
+             eval_n_per_class: int = 50,
+             workload: str = "cnn") -> GridResult:
     """The whole grid — cases × strategies × seeds — as ONE compiled program.
 
     Thin shim over the declarative experiment surface: the raw plan stack
@@ -273,7 +286,7 @@ def run_grid(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
     spec = experiment.ExperimentSpec(
         scenarios=scenarios, strategies=tuple(strategies), seeds=tuple(seeds),
         engine="sim", fl=fl_cfg, aggregation=aggregation, rounds=rounds,
-        eval_n_per_class=eval_n_per_class)
+        eval_n_per_class=eval_n_per_class, workload=workload)
     res = experiment.run(spec, ds=ds)
     return GridResult(res.accuracy, res.loss, res.num_selected,
                       wall_s=res.wall_s, compile_s=res.compile_s)
@@ -282,9 +295,10 @@ def run_grid(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
 def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
                 seeds: Sequence[int], aggregation: Optional[str] = None,
                 rounds: Optional[int] = None,
-                ds: Optional[ImageDataset] = None,
+                ds=None,
                 avail: Optional[np.ndarray] = None,
-                eval_n_per_class: int = 50) -> GridResult:
+                eval_n_per_class: int = 50,
+                workload: "str | Workload" = "cnn") -> GridResult:
     """Compiled grid primitive on raw device arrays (the "sim" engine body):
     vmap(trial) over seeds × strategies × cases, one lower+compile+launch.
     Prefer ``run_grid`` / ``experiment.run`` — this is their backend."""
@@ -300,7 +314,7 @@ def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
     strategies = tuple(strategies)
     trial = make_trial_fn(fl_cfg, ds, aggregation=aggregation, rounds=rounds,
                           eval_n_per_class=eval_n_per_class,
-                          strategies=strategies)
+                          strategies=strategies, workload=workload)
     # sids index the requested universe (the compiled program only contains
     # these strategies); position i of the output's strategy axis is
     # strategies[i].

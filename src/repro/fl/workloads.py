@@ -1,0 +1,300 @@
+"""Pluggable client-workload registry: what each FL client trains.
+
+The paper's selection machinery is architecture-agnostic — Algorithm 1
+operates on label histograms, never on weights — yet until this module every
+execution engine hard-coded the CNN workload.  A :class:`Workload` bundles
+everything an engine needs to run *some* model family over *some*
+label-conditioned synthetic data source:
+
+* ``make_dataset()`` — the default dataset object (engines accept an explicit
+  ``ds=`` override, e.g. a differently-sized ``TokenDataset``),
+* ``init(key, ds)`` — traceable parameter init (the engine hands it the
+  trial's already-folded key, so trajectories are reproducible per seed),
+* ``make_loss(ds)`` — returns the traceable local-training loss
+  ``loss(params, batch) -> (scalar, aux)`` over ONE client minibatch,
+* ``materialize(ds, plan_t, key)`` — the plan-conditioned synthetic
+  materializer: a (N, n_max) int32 label plan row (−1 padding; labels may be
+  image classes, vocab-band domain ids, …) → the round-batch dict,
+* ``eval_set(ds, n_per_class)`` / ``make_eval(ds)`` — a held-out eval batch
+  plus ``eval(params, eval_batch) -> (loss, {"accuracy": ...})``,
+* static shape metadata: ``batch_keys`` (which round-batch leaves carry
+  per-sample data and therefore enter ``client_batches``/the sharded batch
+  PartitionSpecs) and ``num_classes(ds)`` (the label-space size — histogram
+  width for every selection strategy).
+
+Registration contract (mirrors the strategy registry,
+repro.core.selection.register_strategy):
+
+* every callable must be traceable JAX — registered workloads compile
+  straight into the simulator's ``lax.scan`` round loop and the vmapped grid,
+  and into the sharded SPMD round, with zero engine edits;
+* ``materialize`` must return a dict containing at least ``"labels"``
+  ((N, n_max) int32, −1 pad), ``"valid"`` ((N, n_max) bool) and ``"hists"``
+  ((N, num_classes) f32 — ``repro.core.histogram`` of the valid labels), plus
+  any payload leaves named in ``batch_keys``; every ``batch_keys`` leaf is
+  shaped (N, n_max, ...) so ``repro.data.client_batches`` can fold it to
+  (N, n_batches, batch_size, ...);
+* ``make_eval``'s metrics dict must contain ``"accuracy"`` — it is the
+  trajectory every engine records (for the LM workload this is next-token
+  top-1 accuracy on a uniform-domain held-out stream);
+* re-registering a name (``overwrite=True``) swaps the bundle; unknown names
+  raise ``KeyError`` at spec-validation time, before anything compiles.
+
+Built-ins:
+
+* ``cnn`` — the paper's 6-layer CNN over class-conditional synthetic images,
+  extracted verbatim from the pre-registry engines (bit-identical graphs:
+  the Table-I host≡sim parity pins in tests/test_fl_sim.py are unchanged);
+* ``lm`` — a micro decoder-only transformer (repro.models.transformer) over
+  ``TokenDataset`` streams where "class label" = vocab-band domain id: the
+  same non-IID plans, transforms, strategies, and engines drive federated LM
+  pretraining (the DESIGN.md §5 mapping, previously a hand-rolled host loop
+  in examples/fl_lm_pretrain.py).  ``lm_workload(cfg, ...)`` builds variants
+  at any model size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import histogram
+from repro.data import ImageDataset, TokenDataset, materialize_round
+from repro.models import cnn_init, cnn_loss
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward as lm_forward
+from repro.models.transformer import init_model as lm_init_model
+from repro.models.transformer import loss_fn as lm_loss_fn
+from repro.models.transformer import token_ce
+
+Array = jax.Array
+PyTree = Any
+LossFn = Callable[[PyTree, Dict[str, Array]], Tuple[Array, Dict[str, Array]]]
+EvalFn = Callable[[PyTree, Dict[str, Array]], Tuple[Array, Dict[str, Array]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One registered client workload — see the module docstring contract.
+
+    ``name`` is the registry key: ``register_workload`` rewrites it to the
+    registration name, so ``get_workload(x).name == x`` always holds (an
+    unregistered bundle carries whatever its factory chose)."""
+    name: str
+    make_dataset: Callable[[], Any]
+    init: Callable[[Array, Any], PyTree]
+    make_loss: Callable[[Any], LossFn]
+    materialize: Callable[[Any, Any, Array], Dict[str, Array]]
+    eval_set: Callable[[Any, int], Dict[str, Array]]
+    make_eval: Callable[[Any], EvalFn]
+    batch_keys: Tuple[str, ...]
+    num_classes: Callable[[Any], int]
+
+    def dataset(self, ds: Any = None) -> Any:
+        """``ds`` if given, else this workload's default dataset."""
+        return ds if ds is not None else self.make_dataset()
+
+    def param_shapes(self, ds: Any) -> PyTree:
+        """ShapeDtypeStruct tree of the carried model state — what engines
+        use to allocate/shard params without materializing them (the sharded
+        engine builds its replicated PartitionSpec tree from this)."""
+        return jax.eval_shape(lambda k: self.init(k, ds),
+                              jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_WORKLOADS: Dict[str, Workload] = {}
+
+
+def register_workload(name: str, workload: Workload, *,
+                      overwrite: bool = False) -> Workload:
+    """Register ``workload`` under ``name``.
+
+    Every engine (compiled sim grid, host parity loop, sharded SPMD round)
+    dispatches to registered workloads by name through
+    ``ExperimentSpec.workload`` — no engine edits to add a model family.
+    Re-registering an existing name requires ``overwrite=True`` and swaps the
+    bundle in place; specs naming it pick up the new bundle on their next
+    ``run``.  Returns ``workload`` for decorator-style use."""
+    if not name or not isinstance(name, str):
+        raise ValueError(f"workload name must be a non-empty str; got {name!r}")
+    if name in _WORKLOADS and not overwrite:
+        raise ValueError(f"workload {name!r} is already registered; pass "
+                         "overwrite=True to replace it")
+    if not isinstance(workload, Workload):
+        raise TypeError(f"workload {name!r} must be a Workload; "
+                        f"got {type(workload)}")
+    if workload.name != name:
+        workload = dataclasses.replace(workload, name=name)
+    _WORKLOADS[name] = workload
+    return workload
+
+
+def registered_workloads() -> Tuple[str, ...]:
+    return tuple(_WORKLOADS)
+
+
+def get_workload(workload: "str | Workload") -> Workload:
+    """Resolve a workload name (or pass a Workload instance through)."""
+    if isinstance(workload, Workload):
+        return workload
+    try:
+        return _WORKLOADS[workload]
+    except KeyError:
+        raise KeyError(f"unknown workload {workload!r}; have "
+                       f"{registered_workloads()}") from None
+
+
+# ---------------------------------------------------------------------------
+# Builtin: cnn — the paper's image-classification client, extracted verbatim
+# from the pre-registry engines (same call graph, bit-identical trajectories).
+# ---------------------------------------------------------------------------
+
+def _cnn_init(key: Array, ds: ImageDataset) -> PyTree:
+    return cnn_init(key, num_classes=ds.num_classes, image_size=ds.image_size,
+                    channels=ds.channels)
+
+
+def _cnn_make_loss(ds: ImageDataset) -> LossFn:
+    del ds
+
+    def loss(params: PyTree, batch: Dict[str, Array]):
+        return cnn_loss(params, batch["images"], batch["labels"],
+                        batch["valid"])
+    return loss
+
+
+def _cnn_eval_set(ds: ImageDataset, n_per_class: int) -> Dict[str, Array]:
+    x, y = ds.test_set(n_per_class)
+    return {"images": x, "labels": y}
+
+
+def _cnn_make_eval(ds: ImageDataset) -> EvalFn:
+    del ds
+
+    def ev(params: PyTree, eval_batch: Dict[str, Array]):
+        return cnn_loss(params, eval_batch["images"], eval_batch["labels"])
+    return ev
+
+
+CNN_WORKLOAD = Workload(
+    name="cnn",
+    make_dataset=ImageDataset,
+    init=_cnn_init,
+    make_loss=_cnn_make_loss,
+    materialize=materialize_round,
+    eval_set=_cnn_eval_set,
+    make_eval=_cnn_make_eval,
+    batch_keys=("images", "labels", "valid"),
+    num_classes=lambda ds: ds.num_classes,
+)
+
+
+# ---------------------------------------------------------------------------
+# Builtin: lm — federated LM pretraining over domain-skewed token streams.
+# "class label" = vocab-band domain id (TokenDataset), so every non-IID plan,
+# transform, and selection strategy applies unchanged.
+# ---------------------------------------------------------------------------
+
+# Micro config for the default "lm" workload: small enough that the fast test
+# tier compiles host+sim parity in seconds; real sizes go through
+# lm_workload(cfg) (examples/fl_lm_pretrain.py registers a 12M-param one).
+MICRO_LM_CONFIG = ModelConfig(
+    name="fl-lm-micro", arch_type="dense", num_layers=2, d_model=64,
+    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32",
+    fsdp=False, remat=False, scan_layers=False)
+
+
+def _lm_targets(tokens: Array, valid: Array) -> Array:
+    """Next-token targets: roll left, −1 on the last position and on every
+    padded (invalid) sequence — −1 is the transformer loss's ignore id."""
+    tgt = jnp.roll(tokens, -1, axis=-1).at[..., -1].set(-1)
+    return jnp.where(valid[..., None], tgt, -1)
+
+
+def lm_workload(cfg: ModelConfig, *, num_domains: int = 10,
+                seq_len: int = 16, concentration: float = 0.85) -> Workload:
+    """Build an LM workload around ``cfg`` (any text ModelConfig).
+
+    Clients hold ``seq_len``-token sequences sampled from ``num_domains``
+    vocab-band unigram domains; the plan's labels are domain ids.  The local
+    loss is next-token cross-entropy over the client's valid sequences; eval
+    is loss + top-1 next-token accuracy on a held-out uniform-domain stream
+    (one block of ``n_per_class`` sequences per domain)."""
+
+    def make_dataset() -> TokenDataset:
+        return TokenDataset(num_domains=num_domains,
+                            vocab_size=cfg.vocab_size, seq_len=seq_len,
+                            concentration=concentration)
+
+    def _check(ds: TokenDataset) -> None:
+        if ds.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"TokenDataset vocab_size ({ds.vocab_size}) must match the "
+                f"workload model's vocab_size ({cfg.vocab_size})")
+
+    def init(key: Array, ds: TokenDataset) -> PyTree:
+        _check(ds)
+        return lm_init_model(key, cfg)[0]
+
+    def make_loss(ds: TokenDataset) -> LossFn:
+        _check(ds)
+
+        def loss(params: PyTree, batch: Dict[str, Array]):
+            toks = batch["tokens"]
+            targets = _lm_targets(toks, batch["valid"])
+            return lm_loss_fn(params, cfg, {"tokens": toks,
+                                            "targets": targets})
+        return loss
+
+    def materialize(ds: TokenDataset, plan_t, key: Array) -> Dict[str, Array]:
+        """(N, n_max) domain plan row → round batch: token sequences per
+        client slot, domain labels, validity, and the (N, D) domain histogram
+        selection strategies rank on (a zeroed histogram for all-padded
+        clients keeps the validity gates working unchanged)."""
+        labels = jnp.asarray(plan_t, jnp.int32)
+        valid = labels >= 0
+        tokens = ds.sample(key, labels) * valid[..., None]
+        hists = histogram(jnp.where(valid, labels, 0), ds.num_domains, valid)
+        return {"tokens": tokens, "labels": labels, "valid": valid,
+                "hists": hists}
+
+    def eval_set(ds: TokenDataset, n_per_class: int) -> Dict[str, Array]:
+        domains = jnp.tile(jnp.arange(ds.num_domains), n_per_class)
+        tokens = ds.sample(jax.random.PRNGKey(999), domains)
+        return {"tokens": tokens,
+                "targets": _lm_targets(tokens,
+                                       jnp.ones(tokens.shape[0], bool))}
+
+    def make_eval(ds: TokenDataset) -> EvalFn:
+        _check(ds)
+
+        def ev(params: PyTree, eval_batch: Dict[str, Array]):
+            logits, _ = lm_forward(params, cfg,
+                                   {"tokens": eval_batch["tokens"]})
+            # Same token_ce as the training loss — eval can't drift from it.
+            loss, m = token_ce(logits, eval_batch["targets"],
+                               with_accuracy=True)
+            return loss, {"accuracy": m["accuracy"], "n": m["ntok"]}
+        return ev
+
+    return Workload(
+        name=f"lm:{cfg.name}",
+        make_dataset=make_dataset,
+        init=init,
+        make_loss=make_loss,
+        materialize=materialize,
+        eval_set=eval_set,
+        make_eval=make_eval,
+        batch_keys=("tokens", "labels", "valid"),
+        num_classes=lambda ds: ds.num_domains,
+    )
+
+
+register_workload("cnn", CNN_WORKLOAD)
+register_workload("lm", lm_workload(MICRO_LM_CONFIG))

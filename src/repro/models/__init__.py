@@ -1,9 +1,11 @@
 from .config import ModelConfig
 from . import layers, transformer, cnn
 from .transformer import (init_model, model_param_specs, forward, loss_fn,
-                          prefill, decode_step, init_caches, stack_cache_specs)
+                          token_ce, prefill, decode_step, init_caches,
+                          stack_cache_specs)
 from .cnn import cnn_init, cnn_apply, cnn_loss
 
 __all__ = ["ModelConfig", "layers", "transformer", "cnn", "init_model",
-           "model_param_specs", "forward", "loss_fn", "prefill", "decode_step",
-           "init_caches", "stack_cache_specs", "cnn_init", "cnn_apply", "cnn_loss"]
+           "model_param_specs", "forward", "loss_fn", "token_ce", "prefill",
+           "decode_step", "init_caches", "stack_cache_specs", "cnn_init",
+           "cnn_apply", "cnn_loss"]

@@ -377,13 +377,16 @@ def forward(params: PyTree, cfg: ModelConfig, batch: Dict[str, Array]
     return logits, aux
 
 
-def loss_fn(params: PyTree, cfg: ModelConfig, batch: Dict[str, Array]
-            ) -> Tuple[Array, Dict[str, Array]]:
-    """Next-token CE over targets (−1 = ignore), + MoE aux loss."""
-    logits, aux = forward(params, cfg, batch)
-    targets = batch["targets"]
-    if cfg.arch_type == "vlm":  # logits cover [patches, tokens]; score text only
-        logits = logits[:, -targets.shape[1]:]
+def token_ce(logits: Array, targets: Array, *, with_accuracy: bool = False
+             ) -> Tuple[Array, Dict[str, Array]]:
+    """Masked next-token CE over full-sequence logits (−1 = ignore id).
+
+    THE token-level CE convention: ``loss_fn`` (training) and workload evals
+    (repro.fl.workloads) share this one implementation, so an eval trajectory
+    can never drift from the training loss if the convention changes.
+    Returns (loss, metrics) with ``metrics = {"ntok"[, "accuracy"]}`` —
+    accuracy (top-1 next-token) is opt-in so training graphs don't carry the
+    argmax."""
     logits = logits.astype(jnp.float32)
     valid = (targets >= 0)
     tsafe = jnp.where(valid, targets, 0)
@@ -392,8 +395,23 @@ def loss_fn(params: PyTree, cfg: ModelConfig, batch: Dict[str, Array]
     nll = (logz - gold) * valid
     denom = jnp.maximum(valid.sum(), 1)
     loss = nll.sum() / denom
+    m: Dict[str, Array] = {"ntok": denom}
+    if with_accuracy:
+        m["accuracy"] = ((jnp.argmax(logits, -1) == tsafe)
+                         * valid).sum() / denom
+    return loss, m
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: Dict[str, Array]
+            ) -> Tuple[Array, Dict[str, Array]]:
+    """Next-token CE over targets (−1 = ignore), + MoE aux loss."""
+    logits, aux = forward(params, cfg, batch)
+    targets = batch["targets"]
+    if cfg.arch_type == "vlm":  # logits cover [patches, tokens]; score text only
+        logits = logits[:, -targets.shape[1]:]
+    loss, m = token_ce(logits, targets)
     total = loss + cfg.router_aux_weight * aux
-    return total, {"ce": loss, "aux": aux, "ntok": denom}
+    return total, {"ce": loss, "aux": aux, "ntok": m["ntok"]}
 
 
 # ---------------------------------------------------------------------------
