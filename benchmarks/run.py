@@ -4,7 +4,13 @@
 
 Prints ``name,us_per_call,derived`` CSV lines per the contract.
 ``--full`` restores the paper's protocol sizes (hours on this 1-core CPU
-container; the default fast mode keeps every structural element)."""
+container; the default fast mode keeps every structural element).
+
+Set ``REPRO_COMPILE_CACHE=<dir>`` to enable JAX's persistent compilation
+cache for every suite (and their subprocess children — the env var
+propagates): repeat runs skip the compile wall (BENCH_workloads records the
+LM grid at 24.2s compile vs 0.11s exec), and every BENCH_*.json records
+``compile_s`` so cached and cold runs are distinguishable."""
 from __future__ import annotations
 
 import argparse
@@ -21,6 +27,7 @@ SUITES = [
     ("fig8_fig9_cases_a", "benchmarks.fig8_fig9_cases_a"),
     ("fig10_table2_proportion", "benchmarks.fig10_table2_proportion"),
     ("dirichlet_ablation", "benchmarks.dirichlet_ablation"),
+    ("hotpath", "benchmarks.hotpath"),
     ("sim_grid", "benchmarks.sim_grid"),
     ("workload_grid", "benchmarks.workload_grid"),
     ("sharded_round", "benchmarks.sharded_round"),
@@ -43,6 +50,10 @@ def main(argv=None) -> int:
                     help="only run the per-workload (cnn vs lm) compiled "
                          "grid vs host-loop comparison and emit "
                          "BENCH_workloads.json")
+    ap.add_argument("--hotpath", action="store_true",
+                    help="only run the round hot-path micro-bench (one_hot "
+                         "vs fused histogram, tree-map vs fused "
+                         "aggregation) and emit BENCH_hotpath.json")
     args = ap.parse_args(argv)
     if args.sim_grid:
         args.only = "sim_grid"
@@ -50,9 +61,14 @@ def main(argv=None) -> int:
         args.only = "sharded_round"
     if args.workload_grid:
         args.only = "workload_grid"
+    if args.hotpath:
+        args.only = "hotpath"
     if args.only and args.only not in {n for n, _ in SUITES}:
         ap.error(f"unknown suite {args.only!r}; have "
                  f"{sorted(n for n, _ in SUITES)}")
+
+    from .common import maybe_enable_compile_cache
+    maybe_enable_compile_cache()   # before any suite's first jit lowering
 
     import importlib
     failures = []

@@ -1,19 +1,26 @@
-"""BENCH_sharded_round: gather-based vs masked-psum SPMD FL round.
+"""BENCH_sharded_round: gather-based vs masked-psum SPMD FL round, plus the
+O(B) vs O(N) batch-exchange comparison inside the gather mode.
 
 The gather-based round (repro.fl.sharded, mode="gather") trains only the
 selected budget of clients — B padded to a multiple of the group count —
 while the legacy masked-psum baseline (mode="masked") trains every client and
-masks unselected deltas out of the reduction.  This suite measures both
-rounds' steady-state wall-clock on N = 8, 16, 32 emulated host devices
-(``--xla_force_host_platform_device_count``, real FLOPs on the CPU thread
-pool) with 4 clients per device and budget = one client per device, so the
-realized FLOP sparsity is 0.75 and the gather-based round must win whenever
-B < N clients.
+masks unselected deltas out of the reduction.  Within the gather mode the
+selected batch shards can move two ways: ``exchange="a2a"`` (default), the
+O(B) selected-shard exchange — one psum_scatter over the replicated slot
+routing — or ``exchange="allgather"``, the O(N) full-round-batch all-gather
+baseline.  Both exchanges are bit-identical (pinned by the subprocess parity
+test); this suite records their wall-clock AND analytic per-device ring bytes
+(repro.fl.sharded.exchange_bytes_per_device) so the communication claim is
+auditable: at the benchmark's budget (one client per device, 4 clients per
+device → 0.75 FLOP sparsity) a2a moves ¼ of the all-gather's bytes.
 
-Each device count runs in its own subprocess (the XLA device-count flag must
-be set before jax initializes); the child reports one JSON line that the
-parent collects into ``BENCH_sharded_round.json`` at the repo root plus the
-usual CSV lines.
+This suite measures steady-state wall-clock on N = 8, 16, 32 emulated host
+devices (``--xla_force_host_platform_device_count``, real FLOPs on the CPU
+thread pool).  Each device count runs in its own subprocess (the XLA
+device-count flag must be set before jax initializes); the child reports one
+JSON line that the parent collects into ``BENCH_sharded_round.json`` at the
+repo root plus the usual CSV lines.  Every variant records ``compile_s``
+(first-call wall minus a steady round — the jit happens on first call).
 """
 from __future__ import annotations
 
@@ -36,17 +43,26 @@ LOCAL_EPOCHS = 1
 WARMUP_ROUNDS = 1
 TIMED_ROUNDS = 3
 
+# (report key, mode, exchange) — gather/a2a is the production hot path.
+VARIANTS = (
+    ("gather_a2a", "gather", "a2a"),
+    ("gather_allgather", "gather", "allgather"),
+    ("masked", "masked", "a2a"),       # exchange unused in masked mode
+)
+
 
 def _child(devices: int, rounds: int) -> dict:
-    """Runs inside the forced-device-count subprocess: time both modes."""
+    """Runs inside the forced-device-count subprocess: time every variant."""
+    from benchmarks.common import maybe_enable_compile_cache
+    maybe_enable_compile_cache()
+
     import jax
-    import jax.numpy as jnp
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
     from repro.core import case_label_plan
     from repro.data import ImageDataset, client_batches, materialize_round
-    from repro.fl import make_sharded_fl_round
+    from repro.fl import exchange_bytes_per_device, make_sharded_fl_round
     from repro.fl.client import local_train
     from repro.models import cnn_init, cnn_loss
     from repro.optim import get_optimizer
@@ -76,12 +92,13 @@ def _child(devices: int, rounds: int) -> dict:
 
     report = {"devices": devices, "clients": n_clients, "budget": budget,
               "rounds_timed": rounds}
-    for mode in ("gather", "masked"):
+    for name, mode, exchange in VARIANTS:
         round_fn = make_sharded_fl_round(
             mesh, "clients", local_step, n_select=budget,
             num_classes=ds.num_classes, params_pspec=pspec,
             batch_pspec={"images": P(), "labels": P(), "valid": P()},
-            num_clients=n_clients, strategy="labelwise", mode=mode)
+            num_clients=n_clients, strategy="labelwise", mode=mode,
+            exchange=exchange)
         t0 = time.perf_counter()
         p = params
         for t in range(WARMUP_ROUNDS):
@@ -94,15 +111,30 @@ def _child(devices: int, rounds: int) -> dict:
                                jax.random.fold_in(key, 100 + t))
         jax.block_until_ready(p)
         t2 = time.perf_counter()
-        report[mode] = {
-            "warmup_s": t1 - t0,     # includes the mode's compile
-            "s_per_round": (t2 - t1) / rounds,
+        s_per_round = (t2 - t1) / rounds
+        entry = {
+            "warmup_s": t1 - t0,     # compile + WARMUP_ROUNDS executed rounds
+            # uniform BENCH key; the jit compiles on the first warmup call,
+            # so compile ≈ warmup wall minus the rounds it also executed
+            "compile_s": max(0.0, (t1 - t0) - WARMUP_ROUNDS * s_per_round),
+            "s_per_round": s_per_round,
             "trained_per_round": round_fn.trained_per_round,
             "flop_sparsity": round_fn.flop_sparsity,
             "num_selected": float(np.asarray(info["num_selected"])),
         }
+        if mode == "gather":
+            entry["exchange"] = exchange
+            entry["exchange_bytes_per_device"] = exchange_bytes_per_device(
+                batches, n_clients, round_fn.budget_padded, devices, exchange)
+        report[name] = entry
     report["speedup_gather_vs_masked"] = (
-        report["masked"]["s_per_round"] / report["gather"]["s_per_round"])
+        report["masked"]["s_per_round"] / report["gather_a2a"]["s_per_round"])
+    report["a2a_vs_allgather_bytes"] = (
+        report["gather_a2a"]["exchange_bytes_per_device"]
+        / report["gather_allgather"]["exchange_bytes_per_device"])
+    report["a2a_vs_allgather_speedup"] = (
+        report["gather_allgather"]["s_per_round"]
+        / report["gather_a2a"]["s_per_round"])
     return report
 
 
@@ -120,7 +152,7 @@ def main(fast: bool = True) -> dict:
         proc = subprocess.run(
             [sys.executable, "-m", "benchmarks.sharded_round", "--child",
              "--devices", str(devices), "--rounds", str(rounds)],
-            env=env, cwd=ROOT, capture_output=True, text=True, timeout=1200)
+            env=env, cwd=ROOT, capture_output=True, text=True, timeout=1800)
         if proc.returncode != 0:
             raise RuntimeError(
                 f"sharded_round child (devices={devices}) failed:\n"
@@ -133,22 +165,33 @@ def main(fast: bool = True) -> dict:
         "config": {"clients_per_device": CLIENTS_PER_DEVICE,
                    "samples_per_client": SPC, "batch_size": BATCH,
                    "local_epochs": LOCAL_EPOCHS, "strategy": "labelwise",
-                   "budget": "one client per device (N/4 of the fleet)"},
+                   "budget": "one client per device (N/4 of the fleet)",
+                   "exchanges": "a2a = O(B) selected-shard psum_scatter; "
+                                "allgather = O(N) full-batch baseline"},
+        "compile_s": sum(r[name]["compile_s"]
+                         for r in results for name, _, _ in VARIANTS),
         "by_device_count": results,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=2)
 
     for r in results:
-        emit(f"sharded_round/gather_n{r['devices']}",
-             r["gather"]["s_per_round"] * 1e6,
-             f"trained={r['gather']['trained_per_round']}/{r['clients']} "
-             f"sparsity={r['gather']['flop_sparsity']:.2f}")
+        ga, gall = r["gather_a2a"], r["gather_allgather"]
+        emit(f"sharded_round/gather_a2a_n{r['devices']}",
+             ga["s_per_round"] * 1e6,
+             f"trained={ga['trained_per_round']}/{r['clients']} "
+             f"sparsity={ga['flop_sparsity']:.2f} "
+             f"bytes={ga['exchange_bytes_per_device']}")
+        emit(f"sharded_round/gather_allgather_n{r['devices']}",
+             gall["s_per_round"] * 1e6,
+             f"bytes={gall['exchange_bytes_per_device']} "
+             f"a2a_bytes_ratio={r['a2a_vs_allgather_bytes']:.2f}")
         emit(f"sharded_round/masked_n{r['devices']}",
              r["masked"]["s_per_round"] * 1e6,
              f"trained={r['masked']['trained_per_round']}/{r['clients']}")
         emit(f"sharded_round/speedup_n{r['devices']}", 0.0,
-             f"gather_vs_masked={r['speedup_gather_vs_masked']:.2f}x")
+             f"gather_vs_masked={r['speedup_gather_vs_masked']:.2f}x "
+             f"a2a_vs_allgather={r['a2a_vs_allgather_speedup']:.2f}x")
     print(f"# -> {OUT_PATH}")
     return report
 

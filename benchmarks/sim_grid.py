@@ -97,6 +97,9 @@ def main(fast: bool = True, host_sample: int = 4) -> dict:
     speedup = host_projected / sim_total
 
     report = {
+        # uniform top-level key across every BENCH_*.json (the host loop
+        # compiles lazily per trial; its compile rides the measured trials)
+        "compile_s": res.compile_s,
         "grid": {"cases": list(CASES), "strategies": list(STRATEGIES_3),
                  "seeds": n_seeds, "trials": n_trials,
                  "rounds": cfg.global_epochs, "clients": cfg.num_clients,

@@ -52,7 +52,9 @@ def main(fast: bool = True) -> dict:
     n_seeds = N_SEEDS if fast else 3 * N_SEEDS
     n_trials = len(CASES_2) * len(STRATEGIES_2) * n_seeds
     rounds = GRID_FL.global_epochs
-    report: dict = {"grid": {"cases": list(CASES_2),
+    report: dict = {"compile_s": 0.0,   # summed over workloads below —
+                    # the uniform top-level key across every BENCH_*.json
+                    "grid": {"cases": list(CASES_2),
                              "strategies": list(STRATEGIES_2),
                              "seeds": n_seeds, "trials": n_trials,
                              "rounds": rounds,
@@ -78,6 +80,7 @@ def main(fast: bool = True) -> dict:
         host_trial = time.perf_counter() - t0
         host_projected = warmup + host_trial * (n_trials - 1)
 
+        report["compile_s"] += res.compile_s
         report["workloads"][wname] = {
             "sim": {"compile_s": res.compile_s, "exec_s": res.wall_s,
                     "total_s": sim_total,

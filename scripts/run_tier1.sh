@@ -5,6 +5,17 @@
 #   scripts/run_tier1.sh                          # fast tier, <60s
 #   scripts/run_tier1.sh -m "slow or not slow"    # everything
 #   scripts/run_tier1.sh -m slow                  # slow tier only
+#
+# Opt-in persistent XLA compilation cache (mitigates the compile-bound
+# micro-CNN/LM engine tests -- BENCH_workloads records the LM grid at 24.2s
+# compile vs 0.11s exec): set REPRO_COMPILE_CACHE=<dir> and repeat runs
+# reuse compiled programs.  JAX reads these env-var configs at import, so
+# subprocess tests (sharded parity) inherit the cache too.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+if [[ -n "${REPRO_COMPILE_CACHE:-}" ]]; then
+  export JAX_COMPILATION_CACHE_DIR="$REPRO_COMPILE_CACHE"
+  export JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES=-1
+  export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS=0
+fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -18,6 +18,7 @@ from .noniid import (CASES, case_label_plan, bias_mix_plan, dirichlet_plan,
                      MINORITY_PER_CLIENT)
 from .aggregation import (masked_mean, fedavg_aggregate, fedsgd_aggregate,
                           interpolate, psum_aggregate, all_gather_scores,
-                          gather_client_shards, psum_weighted_mean)
+                          gather_client_shards, exchange_selected_shards,
+                          psum_weighted_mean)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

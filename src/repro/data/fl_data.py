@@ -6,9 +6,9 @@ A round batch is a fixed-shape SPMD-friendly structure:
 
 jit contract: everything here is shape-polymorphic only in *static* shapes —
 ``plan_t`` may be a TRACED int32 array (the compiled simulator's lax.scan
-slices label plans on device), and every op below (gather, where, one-hot
-histogram, pad/reshape with static sizes) traces cleanly.  Host numpy plans
-are accepted too and enter the device exactly once.
+slices label plans on device), and every op below (gather, where, the
+dispatched histogram, pad/reshape with static sizes) traces cleanly.  Host
+numpy plans are accepted too and enter the device exactly once.
 """
 from __future__ import annotations
 
@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import histogram
+from repro.kernels.dispatch import client_histograms
 from .synthetic import ImageDataset
 
 Array = jax.Array
@@ -27,11 +27,16 @@ Array = jax.Array
 def materialize_round(ds: ImageDataset, plan_t: Union[np.ndarray, Array],
                       key: Array) -> Dict[str, Array]:
     """plan_t: (N, n_max) int32 labels with −1 padding (host numpy or traced
-    device array) → round batch."""
+    device array) → round batch.
+
+    Histograms go through the backend compute dispatch
+    (repro.kernels.dispatch): the Pallas label_hist kernel on TPU, the
+    bincount-shaped XLA reference on CPU — bit-identical counts either way."""
     labels = jnp.asarray(plan_t, jnp.int32)
     valid = labels >= 0
     images = ds.sample(key, labels)
-    hists = histogram(jnp.where(valid, labels, 0), ds.num_classes, valid)
+    hists = client_histograms(jnp.where(valid, labels, 0), ds.num_classes,
+                              valid)
     return {"images": images, "labels": labels, "valid": valid, "hists": hists}
 
 

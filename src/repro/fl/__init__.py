@@ -3,7 +3,8 @@ from .round import make_fl_round
 from .workloads import (Workload, get_workload, lm_workload, register_workload,
                         registered_workloads)
 from .loop import run_fl, run_fl_host, FLHistory, success_rate, cnn_batch_loss
-from .sharded import make_sharded_fl_round, topn_mask_from_scores
+from .sharded import (exchange_bytes_per_device, make_sharded_fl_round,
+                      topn_mask_from_scores)
 from .sim import (GridResult, grid_arrays, make_trial_fn, run_grid, simulate,
                   stack_case_plans, strategy_id)
 from .experiment import (ExperimentResult, ExperimentSpec, LoweredScenario,
@@ -16,7 +17,8 @@ __all__ = ["local_train", "local_gradient", "make_fl_round", "run_fl",
            "run_fl_host", "FLHistory", "success_rate", "cnn_batch_loss",
            "Workload", "get_workload", "lm_workload", "register_workload",
            "registered_workloads",
-           "make_sharded_fl_round", "topn_mask_from_scores",
+           "exchange_bytes_per_device", "make_sharded_fl_round",
+           "topn_mask_from_scores",
            "GridResult", "grid_arrays", "make_trial_fn", "run_grid",
            "simulate", "stack_case_plans", "strategy_id",
            "ExperimentResult", "ExperimentSpec", "LoweredScenario",

@@ -660,7 +660,14 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     Workload-agnostic: ``spec.workload`` resolves the client model family —
     its ``param_shapes`` metadata sizes the replicated parameter
     PartitionSpec tree and its static ``batch_keys`` size the client-sharded
-    batch specs, so the round trains whichever pytree the workload declares."""
+    batch specs, so the round trains whichever pytree the workload declares.
+
+    The gather phase uses the O(B) selected-shard exchange by default
+    (``exchange="a2a"``, bit-identical to the all-gather baseline); set
+    ``REPRO_SHARDED_EXCHANGE=allgather`` to measure the O(N) path.  The
+    chosen exchange is reported in ``meta["sharded"]["exchange"]``."""
+    import os
+
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
@@ -715,12 +722,14 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     # The workload's static shape metadata: params replicated across the
     # client mesh axis, one client-sharded PartitionSpec per batch leaf.
     pspec = jax.tree_util.tree_map(lambda _: P(), wl.param_shapes(ds))
+    exchange = os.environ.get("REPRO_SHARDED_EXCHANGE", "a2a")
     round_fns = {
         strat: make_sharded_fl_round(
             mesh, "clients", local_step, n_select=cfg.clients_per_round,
             num_classes=wl.num_classes(ds), params_pspec=pspec,
             batch_pspec={k: P() for k in wl.batch_keys},
-            num_clients=n_clients, strategy=strat, server_lr=server_lr)
+            num_clients=n_clients, strategy=strat, server_lr=server_lr,
+            exchange=exchange)
         for strat in spec.strategies}
     for k, low in enumerate(lowered):
         for r, seed in enumerate(spec.seeds):
@@ -746,7 +755,7 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
                     nsel[k, s, r, t] = float(info["num_selected"])
     meta = {"sharded": {
         "groups": groups, "clients": n_clients,
-        "clients_per_group": n_clients // groups,
+        "clients_per_group": n_clients // groups, "exchange": exchange,
         "strategies": {
             strat: {"budget": fn.budget,
                     "trained_per_round": fn.trained_per_round,

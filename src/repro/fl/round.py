@@ -25,8 +25,8 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import (fedavg_aggregate, get_strategy, interpolate,
-                        selection_budget)
+from repro.core import get_strategy, interpolate, selection_budget
+from repro.kernels.dispatch import masked_weighted_mean
 from repro.optim import apply_updates, get_optimizer
 from .client import local_train, local_gradient
 
@@ -48,6 +48,11 @@ def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
     materializer must emit — whose per-client sums are the FedAvg n_i
     weights.  data_sel: leaves (n_sel, n_batches, batch_size, ...); live:
     (n_sel,) 0/1.  Returns (new_global_params, per-client metrics).
+
+    The FedAvg/FedSGD reduction routes through the backend compute dispatch
+    (repro.kernels.dispatch.masked_weighted_mean): the fused Pallas
+    weighted-agg kernel on TPU, ``masked_mean`` — the parity-pinned
+    reference — on CPU.
     """
     n_sel = live.shape[0]
     sizes = data_sel["valid"].reshape(n_sel, -1).sum(-1).astype(jnp.float32)
@@ -55,7 +60,7 @@ def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
     if agg_kind == "fedsgd":
         grads, m = jax.vmap(
             lambda b: local_gradient(global_params, b, loss_fn))(data_sel)
-        agg_g = fedavg_aggregate(grads, live, sizes)
+        agg_g = masked_weighted_mean(grads, live, sizes)
         new_params = apply_updates(
             global_params,
             jax.tree_util.tree_map(lambda g: -fl_cfg.lr * g, agg_g))
@@ -63,7 +68,7 @@ def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
         trained, m = jax.vmap(
             lambda b: local_train(global_params, opt, b, loss_fn,
                                   fl_cfg.local_epochs))(data_sel)
-        agg = fedavg_aggregate(trained, live, sizes)
+        agg = masked_weighted_mean(trained, live, sizes)
         new_params = interpolate(global_params, agg, fl_cfg.server_lr)
 
     # Algorithm 1's count=0 degradation: an empty selection must leave the

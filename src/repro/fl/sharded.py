@@ -7,8 +7,10 @@ production mesh) carries a *block* of clients per slice — ``num_clients``
 need not equal the device count; each of the G groups holds C = N/G clients.
 Each round:
 
-  1. every group computes its C clients' label histograms locally (an
-     unavailable client's histogram is zeroed — the single availability
+  1. every group computes its C clients' label histograms locally through
+     the backend compute dispatch (repro.kernels.dispatch) — the Pallas
+     label_hist kernel on TPU, the bincount-shaped XLA reference on CPU/GPU
+     (an unavailable client's histogram is zeroed — the single availability
      application every engine shares),
   2. all-gathers the (N, C_classes) histogram matrix — Algorithm 1's
      "transmit statistics to server" step: N small integer vectors, not N
@@ -18,23 +20,30 @@ Each round:
   3. every shard deterministically computes the same SelectionResult through
      the strategy registry (repro.core.selection) — mask, order, and the
      strategy's STATIC training budget B,
-  4. **gather**: the batch shards of ``order[:B_pad]`` (B padded up to a
-     multiple of G so the sub-round stays SPMD-even) are gathered so each
-     group holds exactly B_pad/G selected clients' data; local training runs
+  4. **exchange**: the batch shards of ``order[:B_pad]`` (B padded up to a
+     multiple of G so the sub-round stays SPMD-even) move so each group
+     holds exactly B_pad/G selected clients' data; local training runs
      vmapped over those slots ONLY — unselected clients spend ZERO training
      FLOPs instead of being masked out of the reduction.  Realized FLOP
      sparsity is 1 − B_pad/N per round (the wrapper exposes it statically as
-     ``round_fn.flop_sparsity``),
+     ``round_fn.flop_sparsity``).  ``exchange="a2a"`` (default) is the O(B)
+     selected-shard exchange (core.aggregation.exchange_selected_shards):
+     selection is replicated, so every shard computes the same static-budget
+     slot routing and ONE psum_scatter moves only the B_pad selected shards
+     — ring bytes (G−1)/G·B_pad versus the O(N) full-batch all-gather's
+     (G−1)/G·N.  ``exchange="allgather"`` keeps the all-gather path as the
+     measured baseline; both are bit-identical (one owner per slot).
   5. **scatter**: the trained slots' parameter deltas enter a weighted psum
      pair (live mask × n_i weights, FedAvg Eq. 1) whose result is replicated
      to every shard — the server broadcast, fused into the same collective.
      Deltas (not params) are reduced, so a bf16 ``agg_dtype`` halves the
-     cross-pod all-reduce bytes.
+     cross-pod all-reduce bytes; the in-shard slot reduction routes through
+     the compute dispatch (fused Pallas weighted-agg kernel on TPU).
 
 ``mode="masked"`` keeps the legacy masked-psum round (every client trains,
 the mask zeroes unselected contributions) as the measured baseline —
 ``benchmarks/sharded_round.py`` pins the gather-based round's win whenever
-B < N.
+B < N and records both exchanges' wall-clock and bytes.
 
 Numerics match the host round / compiled simulator: identical histograms →
 identical registry selection (same tie-breaking), identical ``local_step``
@@ -57,10 +66,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.label_stats import histogram
 from repro.core.selection import (SelectFn, SelectionResult, get_strategy,
                                   selection_budget, topn_mask)
-from repro.core.aggregation import gather_client_shards, psum_weighted_mean
+from repro.core.aggregation import (exchange_selected_shards,
+                                    gather_client_shards, psum_weighted_mean)
+from repro.kernels.dispatch import client_histograms, weighted_sum_tree
 
 Array = jax.Array
 PyTree = Any
@@ -117,7 +127,8 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
                           num_clients: Optional[int] = None,
                           strategy: Union[str, SelectFn] = "labelwise",
                           server_lr: float = 1.0,
-                          mode: str = "gather") -> Callable:
+                          mode: str = "gather",
+                          exchange: str = "a2a") -> Callable:
     """Build the SPMD FL round.
 
     ``local_step(params, batch) -> params`` is ONE client's local training
@@ -139,6 +150,15 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
     every-client-trains masked-psum baseline.  Both share selection and the
     weighted-delta scatter, so they are numerically interchangeable.
 
+    ``exchange`` picks how the selected batch shards move in ``mode=
+    "gather"``: ``"a2a"`` (default) the O(B) selected-shard exchange — one
+    psum_scatter over the replicated slot routing moves only the B_pad
+    selected clients' shards; ``"allgather"`` the O(N) full-round-batch
+    all-gather baseline.  The two are BIT-IDENTICAL (every training slot has
+    exactly one owning shard), pinned by the sharded subprocess parity test;
+    :func:`exchange_bytes_per_device` gives the analytic ring-byte cost of
+    each.
+
     ``with_availability=True`` adds a trailing ``avail`` argument — a (N,)
     0/1 per-client availability vector (repro.core.noniid.availability_plan
     row), sharded over the client axis.  An unavailable client's histogram is
@@ -154,6 +174,9 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
     """
     if mode not in ("gather", "masked"):
         raise ValueError(f"mode must be 'gather' or 'masked'; got {mode!r}")
+    if exchange not in ("a2a", "allgather"):
+        raise ValueError(f"exchange must be 'a2a' or 'allgather'; "
+                         f"got {exchange!r}")
     n_groups = mesh.shape[client_axis]
     n_clients = n_groups if num_clients is None else int(num_clients)
     if n_clients % n_groups:
@@ -173,7 +196,8 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
                  ) -> Tuple[PyTree, Dict[str, Array]]:
         # labels/valid: (num_clients, n_i) sharded over the client axis →
         # per-shard (per_group, n_i); batch leaves likewise (per_group, ...).
-        hist = histogram(jnp.where(valid, labels, 0), num_classes, valid)
+        hist = client_histograms(jnp.where(valid, labels, 0), num_classes,
+                                 valid)
         if avail is not None:
             hist = hist * avail[:, None].astype(hist.dtype)  # dark → empty
         hists_all = jax.lax.all_gather(hist, client_axis, tiled=True)  # (N,C)
@@ -182,13 +206,19 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
         g = jax.lax.axis_index(client_axis)
 
         if mode == "gather":
-            # Re-shard: the top-B_pad selected clients' batch shards are
-            # gathered so each group trains exactly `slots` of them — the
-            # other N − B_pad clients spend zero training FLOPs.
+            # Re-shard: the top-B_pad selected clients' batch shards move so
+            # each group trains exactly `slots` of them — the other N − B_pad
+            # clients spend zero training FLOPs.
             my_slots = jax.lax.dynamic_slice_in_dim(
                 sel.order[:budget_padded], g * slots, slots)
-            my_batch = jax.tree_util.tree_map(
-                lambda x: x[my_slots], gather_client_shards(batch, client_axis))
+            if exchange == "a2a":
+                my_batch = exchange_selected_shards(
+                    batch, sel.order[:budget_padded], client_axis,
+                    num_groups=n_groups, per_group=per_group)
+            else:
+                my_batch = jax.tree_util.tree_map(
+                    lambda x: x[my_slots],
+                    gather_client_shards(batch, client_axis))
         else:
             my_slots = g * per_group + jnp.arange(per_group, dtype=jnp.int32)
             my_batch = batch
@@ -202,8 +232,12 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
             lambda a, b: (a.astype(jnp.float32)
                           - b.astype(jnp.float32)).astype(dt),
             new_local, params)
+        # The in-shard Σ_s w·Δ slot reduction routes through the compute
+        # dispatch (fused Pallas kernel on TPU, plain XLA elsewhere); the
+        # psum pair then finishes the replicated mean.
         agg_delta = psum_weighted_mean(delta, live * sizes[my_slots],
-                                       client_axis)
+                                       client_axis,
+                                       local_sum=weighted_sum_tree)
         new_global = jax.tree_util.tree_map(
             lambda p, d: (p.astype(jnp.float32)
                           + server_lr * d).astype(p.dtype),
@@ -234,7 +268,34 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
         return mapped(*args)
 
     wrapper.budget = budget
+    wrapper.budget_padded = budget_padded
     wrapper.trained_per_round = trained_per_round
     wrapper.flop_sparsity = 1.0 - trained_per_round / n_clients
     wrapper.mode = mode
+    wrapper.exchange = exchange if mode == "gather" else None
     return wrapper
+
+
+def exchange_bytes_per_device(batch: Dict[str, Array], num_clients: int,
+                              budget_padded: int, num_groups: int,
+                              exchange: str) -> int:
+    """Analytic per-device ring bytes of the gather-phase batch exchange.
+
+    ``batch`` leaves carry the (num_clients, ...) client axis; a client's
+    shard is ``prod(shape[1:]) · itemsize`` bytes per leaf (bool leaves ride
+    the a2a psum_scatter as int8 — also 1 byte, so the modes' per-client
+    bytes agree).  On a ring, ``allgather`` receives the other groups'
+    ``N − N/G`` client shards; ``a2a`` (reduce-scatter over the B_pad slot
+    routing) moves ``B_pad − B_pad/G`` shards — O(B) instead of O(N), the
+    ``benchmarks/sharded_round.py`` receipt."""
+    if exchange not in ("a2a", "allgather"):
+        raise ValueError(f"exchange must be 'a2a' or 'allgather'; "
+                         f"got {exchange!r}")
+    per_client = 0
+    for leaf in jax.tree_util.tree_leaves(batch):
+        n_elems = 1
+        for d in leaf.shape[1:]:
+            n_elems *= int(d)
+        per_client += n_elems * jnp.dtype(leaf.dtype).itemsize
+    rows = num_clients if exchange == "allgather" else budget_padded
+    return (rows - rows // num_groups) * per_client

@@ -31,6 +31,13 @@ LM over domain-skewed token streams, …) comes from the workload registry
 (repro.fl.workloads) — ``workload=`` names a registered bundle whose traced
 init/materialize/loss/eval compile into the scan body.  This module contains
 no model- or dataset-specific code.
+
+The scan body's non-training hot path — per-client histograms (inside the
+workload's ``materialize``) and the FedAvg/FedSGD reduction (inside
+``client_update_step``) — compiles through the backend compute dispatch
+(repro.kernels.dispatch): Pallas kernels on TPU, the parity-pinned XLA
+references on CPU, decided at trace time so the compiled grid contains
+exactly one implementation.
 """
 from __future__ import annotations
 

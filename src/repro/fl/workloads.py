@@ -30,7 +30,8 @@ repro.core.selection.register_strategy):
   and into the sharded SPMD round, with zero engine edits;
 * ``materialize`` must return a dict containing at least ``"labels"``
   ((N, n_max) int32, −1 pad), ``"valid"`` ((N, n_max) bool) and ``"hists"``
-  ((N, num_classes) f32 — ``repro.core.histogram`` of the valid labels), plus
+  ((N, num_classes) f32 — ``repro.kernels.dispatch.client_histograms`` of
+  the valid labels: Pallas-fused on TPU, XLA reference elsewhere), plus
   any payload leaves named in ``batch_keys``; every ``batch_keys`` leaf is
   shaped (N, n_max, ...) so ``repro.data.client_batches`` can fold it to
   (N, n_batches, batch_size, ...);
@@ -60,8 +61,8 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import histogram
 from repro.data import ImageDataset, TokenDataset, materialize_round
+from repro.kernels.dispatch import client_histograms
 from repro.models import cnn_init, cnn_loss
 from repro.models.config import ModelConfig
 from repro.models.transformer import forward as lm_forward
@@ -260,7 +261,8 @@ def lm_workload(cfg: ModelConfig, *, num_domains: int = 10,
         labels = jnp.asarray(plan_t, jnp.int32)
         valid = labels >= 0
         tokens = ds.sample(key, labels) * valid[..., None]
-        hists = histogram(jnp.where(valid, labels, 0), ds.num_domains, valid)
+        hists = client_histograms(jnp.where(valid, labels, 0),
+                                  ds.num_domains, valid)
         return {"tokens": tokens, "labels": labels, "valid": valid,
                 "hists": hists}
 

@@ -1,4 +1,9 @@
-"""jit'd wrapper: histogram + the derived Algorithm-1 statistics in one call."""
+"""jit'd wrapper: histogram + the derived Algorithm-1 statistics in one call.
+
+Always runs the Pallas kernel (``interpret=`` picks the interpreter); prefer
+``repro.kernels.client_statistics`` — the backend-dispatched version
+(``repro.kernels.dispatch``), which is what the package exports and what the
+engines route through."""
 from __future__ import annotations
 
 import functools

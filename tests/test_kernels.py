@@ -64,8 +64,10 @@ class TestLabelHist:
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
     def test_client_statistics_end_to_end(self):
+        # the dispatch version; force the kernel path (this is a kernel test)
         labels = jnp.array([[0, 1, 2, -1], [3, 3, 3, 3]])
-        hists, scores = client_statistics(labels, num_classes=5)
+        hists, scores = client_statistics(labels, num_classes=5,
+                                          backend="pallas_interpret")
         assert float(hists[0].sum()) == 3 and float(hists[1].sum()) == 4
         assert float(scores[0]) > 0 and float(scores[1]) == 0  # σ²=0 single label
 
