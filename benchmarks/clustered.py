@@ -1,0 +1,110 @@
+"""BENCH_clustered: per-cluster global models vs the single global model.
+
+The clustered-FL acceptance receipt: the same non-IID scenario grid runs
+through the compiled engine twice — ``aggregation="fedavg"`` (one global
+model, the paper's §V protocol) and ``aggregation="clustered_fedavg"``
+(two per-cluster global models assigned by the round's label-histogram
+k-means, Briggs 2004.11791-family) — and the report records final accuracy
+side by side on the non-IID cases, where a single model averaged across
+disjoint label populations is exactly the failure mode §IV's clustering
+targets.  The scalar clustered trajectory is the valid-population-weighted
+mixture over cluster models (identical across engines), so the two columns
+are directly comparable.
+
+Output: ``BENCH_clustered.json`` at the repo root + the usual CSV lines.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs.paper_cnn import FLConfig
+from repro.fl import ExperimentSpec, ScenarioSpec, run
+from .common import emit
+
+# case1b/case2b: majority-biased and dual-label non-IID splits — the two
+# headline cases where label populations fragment; iid rides along as the
+# control where clustering should neither help much nor hurt.
+CASES_BENCH = ("case1b", "case2b", "iid")
+AGGREGATIONS = ("fedavg", "clustered_fedavg")
+STRATEGY = "labelwise"
+N_SEEDS = 2
+SPC = 8
+EVAL_N = 2
+
+GRID_FL = FLConfig(num_clients=8, clients_per_round=4, global_epochs=3,
+                   local_epochs=1, batch_size=8, lr=1e-3)
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                        "BENCH_clustered.json")
+
+
+def _spec(aggregation: str, n_seeds: int, rounds: int) -> ExperimentSpec:
+    return ExperimentSpec(
+        scenarios=tuple(
+            ScenarioSpec.from_case(c, per_seed_plans=True,
+                                   samples_per_client=SPC,
+                                   majority=int(SPC * 200 / 290))
+            for c in CASES_BENCH),
+        strategies=(STRATEGY,), seeds=tuple(range(n_seeds)), engine="sim",
+        fl=GRID_FL, aggregation=aggregation, rounds=rounds,
+        eval_n_per_class=EVAL_N)
+
+
+def main(fast: bool = True) -> dict:
+    n_seeds = N_SEEDS if fast else 3 * N_SEEDS
+    rounds = GRID_FL.global_epochs if fast else 4 * GRID_FL.global_epochs
+    report: dict = {"compile_s": 0.0,
+                    "grid": {"cases": list(CASES_BENCH),
+                             "strategy": STRATEGY, "seeds": n_seeds,
+                             "rounds": rounds,
+                             "clients": GRID_FL.num_clients,
+                             "samples_per_client": SPC},
+                    "aggregations": {}, "cases": {}}
+
+    results = {}
+    for agg in AGGREGATIONS:
+        res = run(_spec(agg, n_seeds, rounds))
+        results[agg] = res
+        total = res.wall_s + res.compile_s
+        report["compile_s"] += res.compile_s
+        entry = {"compile_s": res.compile_s, "exec_s": res.wall_s,
+                 "total_s": total,
+                 "final_accuracy_by_case": {
+                     c: float(res.final_accuracy[k].mean())
+                     for k, c in enumerate(CASES_BENCH)}}
+        ct = res.cluster_trajectories()
+        if ct is not None:
+            entry["n_clusters"] = ct["n_clusters"]
+            # how decisively the round k-means splits the population:
+            # mean fraction of clients in the larger cluster, per case
+            assign = ct["assign"]                        # (K, S, R, T, N)
+            frac = (assign == 0).mean(axis=-1)
+            entry["majority_cluster_fraction_by_case"] = {
+                c: float(np.maximum(frac, 1 - frac)[k].mean())
+                for k, c in enumerate(CASES_BENCH)}
+        report["aggregations"][agg] = entry
+        emit(f"clustered/{agg}", total / (len(CASES_BENCH) * n_seeds * rounds)
+             * 1e6, f"mean_final_acc={float(res.final_accuracy.mean()):.4f} "
+             f"compile={res.compile_s:.1f}s")
+
+    for k, c in enumerate(CASES_BENCH):
+        single = float(results["fedavg"].final_accuracy[k].mean())
+        clust = float(results["clustered_fedavg"].final_accuracy[k].mean())
+        report["cases"][c] = {"fedavg": single, "clustered_fedavg": clust,
+                              "delta": clust - single}
+        emit(f"clustered/case_{c}", 0.0,
+             f"fedavg={single:.4f} clustered={clust:.4f} "
+             f"delta={clust - single:+.4f}")
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("clustered/report", 0.0, f"-> {OUT_PATH}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ SUITES = [
     ("hotpath", "benchmarks.hotpath"),
     ("sim_grid", "benchmarks.sim_grid"),
     ("workload_grid", "benchmarks.workload_grid"),
+    ("clustered", "benchmarks.clustered"),
     ("sharded_round", "benchmarks.sharded_round"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
@@ -54,6 +55,11 @@ def main(argv=None) -> int:
                     help="only run the round hot-path micro-bench (one_hot "
                          "vs fused histogram, tree-map vs fused "
                          "aggregation) and emit BENCH_hotpath.json")
+    ap.add_argument("--clustered", action="store_true",
+                    help="only run the clustered_fedavg (per-cluster global "
+                         "models) vs single-model fedavg accuracy "
+                         "comparison on the non-IID cases and emit "
+                         "BENCH_clustered.json")
     args = ap.parse_args(argv)
     if args.sim_grid:
         args.only = "sim_grid"
@@ -63,6 +69,8 @@ def main(argv=None) -> int:
         args.only = "workload_grid"
     if args.hotpath:
         args.only = "hotpath"
+    if args.clustered:
+        args.only = "clustered"
     if args.only and args.only not in {n for n, _ in SUITES}:
         ap.error(f"unknown suite {args.only!r}; have "
                  f"{sorted(n for n, _ in SUITES)}")

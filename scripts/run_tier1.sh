@@ -18,4 +18,6 @@ if [[ -n "${REPRO_COMPILE_CACHE:-}" ]]; then
   export JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES=-1
   export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS=0
 fi
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+# --durations=15 surfaces the slowest tests so compile-bound regressions in
+# the engine tiers are visible in every CI log, not just the weekly bench.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q --durations=15 "$@"

@@ -6,12 +6,14 @@ from .label_stats import (histogram, label_variance, label_variance_normed,
 from .kl import kl_divergence, kl_to_uniform, uniformity_score
 from .clustering import (cluster_membership, cluster_sizes, area_index,
                          area_counts, num_areas_upper_bound,
-                         selection_priority, greedy_area_selection)
+                         selection_priority, greedy_area_selection,
+                         kmeans_cluster, cluster_counts)
 from .selection import (SelectionResult, STRATEGIES, BUILTIN_STRATEGIES,
                         get_strategy, register_strategy, registered_strategies,
                         selection_budget, strategy_id, topn_mask,
                         select_random, select_labelwise, select_labelwise_unnorm,
-                        select_coverage, select_kl, select_entropy, select_full)
+                        select_coverage, select_kl, select_entropy, select_full,
+                        select_labelwise_priority)
 from .noniid import (CASES, case_label_plan, bias_mix_plan, dirichlet_plan,
                      plan_round, availability_plan, apply_availability,
                      quantity_skew, SAMPLES_PER_CLIENT, MAJORITY_PER_CLIENT,
@@ -19,6 +21,9 @@ from .noniid import (CASES, case_label_plan, bias_mix_plan, dirichlet_plan,
 from .aggregation import (masked_mean, fedavg_aggregate, fedsgd_aggregate,
                           interpolate, psum_aggregate, all_gather_scores,
                           gather_client_shards, exchange_selected_shards,
-                          psum_weighted_mean)
+                          psum_weighted_mean,
+                          Aggregator, AGGREGATORS, BUILTIN_AGGREGATORS,
+                          register_aggregator, registered_aggregators,
+                          aggregator_id, get_aggregator)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -15,7 +15,8 @@ reduction*; weights default to FedAvg's n_i/Σn_i (Eq. 1) or uniform 1/n
 """
 from __future__ import annotations
 
-from typing import Any
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +60,147 @@ def interpolate(global_params: PyTree, aggregated: PyTree, server_lr: float = 1.
     """θ ← θ + η_s (θ̄ − θ).  η_s = 1 reduces to the paper's broadcast-the-mean."""
     return jax.tree_util.tree_map(
         lambda g, a: (g + server_lr * (a - g)).astype(g.dtype), global_params, aggregated)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation registry — the fifth registry axis (scenarios × strategies ×
+# engines × workloads × AGGREGATORS), mirroring the strategy registry's
+# contract (repro.core.selection.register_strategy): open, append-only ids,
+# overwrite keeps the id.
+# ---------------------------------------------------------------------------
+
+# fn(stacked_updates, live, sizes) -> aggregated tree: the masked weighted
+# client reduction.  ``stacked_updates`` leaves carry a leading client axis;
+# ``live`` is the (S,) 0/1 live-slot mask and ``sizes`` the (S,) n_i FedAvg
+# weights.  Must be traceable JAX (it compiles into every engine's round).
+AggregateFn = Callable[[PyTree, Array, Optional[Array]], PyTree]
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    """One server-aggregation family, resolved by name from the registry.
+
+    ``base`` picks the local-update + server rule the engines already share:
+    ``"fedavg"`` (clients run local epochs, the server takes the masked
+    weighted parameter mean and interpolates by ``server_lr``) or
+    ``"fedsgd"`` (clients report one gradient, the server takes a masked
+    weighted gradient mean and applies one −lr step).
+
+    ``n_clusters > 1`` turns the family CLUSTERED: every engine carries a
+    ``(n_clusters, *params)`` stacked global-model pytree, assigns clients to
+    clusters inside the compiled round (``repro.core.clustering
+    .kmeans_cluster`` on the round's label-histogram matrix,
+    ``kmeans_iters`` fixed Lloyd iterations), trains each selected client
+    from ITS cluster's model, and aggregates per cluster — the multi-model
+    FL of Briggs 2004.11791 / FedClust 2403.04144 with the paper's label
+    statistics as the clustering signal.
+
+    ``reduce`` optionally overrides the masked weighted reduction
+    (:data:`AggregateFn` contract).  ``None`` — the builtins — means the
+    backend compute dispatch's ``masked_weighted_mean``
+    (repro.kernels.dispatch: the fused Pallas weighted-agg kernel on TPU,
+    the parity-pinned XLA reference elsewhere); a registered callable slots
+    in robust aggregators (median, trimmed mean, …) without engine edits.
+    """
+    base: str = "fedavg"
+    n_clusters: int = 1
+    kmeans_iters: int = 4
+    reduce: Optional[AggregateFn] = None
+
+    def __post_init__(self):
+        if self.base not in ("fedavg", "fedsgd"):
+            raise ValueError(
+                f"Aggregator.base must be 'fedavg' or 'fedsgd' (the engines' "
+                f"two local-update rules); got {self.base!r}")
+        if self.n_clusters < 1:
+            raise ValueError(f"n_clusters must be >= 1; got {self.n_clusters}")
+
+    @property
+    def clustered(self) -> bool:
+        return self.n_clusters > 1
+
+
+# Name → Aggregator.  Mutated ONLY through register_aggregator so the id
+# ledger below can never drift from the dict contents.
+AGGREGATORS: Dict[str, Aggregator] = {}
+
+# Append-only registration order — the stable-id ledger (the strategy
+# registry's contract verbatim): position IS the aggregator's integer id,
+# entries are never removed or reordered.
+_AGG_REGISTRY_ORDER: List[str] = []
+
+
+def register_aggregator(name: str, agg: "Aggregator | AggregateFn", *,
+                        overwrite: bool = False) -> Aggregator:
+    """Register a server-aggregation family under ``name``.
+
+    ``agg`` is an :class:`Aggregator` — or a bare :data:`AggregateFn`
+    callable, which is wrapped as ``Aggregator(base="fedavg", reduce=fn)``:
+    the one-callable path a robust aggregator (coordinate-wise median,
+    trimmed mean, Krum …) needs.  The callable must be traceable JAX — it
+    compiles into the sim scan body, the jitted host round, and the sharded
+    round's in-shard slot reduction.
+
+    Stable-id contract (same as ``register_strategy``): a new name appends
+    to the id ledger (``aggregator_id(name) == len(registered_aggregators())
+    − 1``); re-registering with ``overwrite=True`` swaps the family but
+    keeps the id; ids never remap.  Unknown names raise at
+    ``ExperimentSpec.validate()``, pre-compile.  Returns the registered
+    :class:`Aggregator`."""
+    if not name or not isinstance(name, str):
+        raise ValueError(f"aggregator name must be a non-empty str; got {name!r}")
+    if name in AGGREGATORS and not overwrite:
+        raise ValueError(
+            f"aggregator {name!r} is already registered "
+            f"(id {aggregator_id(name)}); pass overwrite=True to replace it "
+            "(the id is kept)")
+    if callable(agg) and not isinstance(agg, Aggregator):
+        agg = Aggregator(base="fedavg", reduce=agg)
+    if not isinstance(agg, Aggregator):
+        raise TypeError(f"aggregator {name!r} must be an Aggregator or a "
+                        f"callable AggregateFn; got {type(agg)}")
+    AGGREGATORS[name] = agg
+    if name not in _AGG_REGISTRY_ORDER:
+        _AGG_REGISTRY_ORDER.append(name)
+    return agg
+
+
+def registered_aggregators() -> Tuple[str, ...]:
+    """All aggregator names in stable-id order (index == aggregator_id)."""
+    return tuple(_AGG_REGISTRY_ORDER)
+
+
+def aggregator_id(name: str) -> int:
+    """Stable integer id of an aggregation family."""
+    try:
+        return _AGG_REGISTRY_ORDER.index(name)
+    except ValueError:
+        raise KeyError(f"unknown aggregator {name!r}; have "
+                       f"{registered_aggregators()}") from None
+
+
+def get_aggregator(name: str) -> Aggregator:
+    try:
+        return AGGREGATORS[name]
+    except KeyError:
+        raise KeyError(f"unknown aggregator {name!r}; have "
+                       f"{registered_aggregators()}") from None
+
+
+# Builtins: the two families every engine always compiled (ids 0/1 —
+# extracted behind the registry bit-identically: their reduce=None resolves
+# to the exact dispatch call the pre-registry engines made) plus their
+# 2-cluster multi-global-model forms.  Wider cluster counts register through
+# the public API: register_aggregator("clustered_fedavg4",
+# Aggregator("fedavg", n_clusters=4)).
+BUILTIN_AGGREGATORS: Tuple[str, ...] = (
+    "fedavg", "fedsgd", "clustered_fedavg", "clustered_fedsgd")
+for _name, _agg in zip(BUILTIN_AGGREGATORS,
+                       (Aggregator("fedavg"), Aggregator("fedsgd"),
+                        Aggregator("fedavg", n_clusters=2),
+                        Aggregator("fedsgd", n_clusters=2))):
+    register_aggregator(_name, _agg)
+del _name, _agg
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""Label-wise clustering topology (paper §IV-A/B).
+"""Label-wise clustering topology (paper §IV-A/B) + traceable client k-means.
 
 Clusters are *label-membership* sets: C_k = {clients i : class k ∈ ℒ_i}.
 Their intersection pattern partitions clients into areas A_p; per Fig. 3 the
@@ -9,13 +9,22 @@ variance score.  §IV-B bounds the number of areas by F(τ) = τ² − τ + 1.
 
 Everything operates on the (N, C) histogram matrix — no pairwise distances, no
 O(N²): this is the paper's efficiency claim vs weight-space clustering.
+
+:func:`kmeans_cluster` is the clustered-FL (multi-global-model) entry point:
+a fixed-iteration Lloyd k-means over normalized label histograms, built from
+``lax.scan`` so it traces straight into the compiled round body of every
+engine (sim scan, host jitted round, sharded shard_map) — the Briggs
+2004.11791 / FedClust 2403.04144 family of per-cluster global models, driven
+by the paper's own label statistics instead of O(N²) weight distances.
 """
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .label_stats import coverage, label_variance_normed
+from .label_stats import coverage, empirical_pdf, label_variance_normed
 
 Array = jax.Array
 
@@ -73,3 +82,71 @@ def greedy_area_selection(hists: Array, n_select: int) -> Array:
     clients by area priority.  Single argsort — O(N log N), matching §V."""
     order = jnp.argsort(-selection_priority(hists))
     return order[:n_select]
+
+
+def kmeans_cluster(hists: Array, n_clusters: int, *,
+                   n_iters: int = 4) -> Tuple[Array, Array]:
+    """Fixed-iteration Lloyd k-means over normalized label histograms:
+    (N, C) hists → ((N,) int32 cluster assignment, (M, C) centroids).
+
+    Built to compile INSIDE the round body of every engine:
+
+    * fixed iteration count (``n_iters``) as a ``lax.scan`` — no data-
+      dependent convergence loop, so the op traces under jit/vmap/shard_map;
+    * DETERMINISTIC initialization — no PRNG key to thread, so the host
+      round, the compiled simulator, and the replicated sharded computation
+      agree bit-for-bit given the same histogram matrix.  Centroids seed
+      from the clients at evenly spaced ranks of the §IV-A area-priority
+      order (:func:`selection_priority`): the top-priority (widest-coverage)
+      client anchors cluster 0 and the lowest-priority client anchors the
+      last, which spreads the seeds across the label-distribution spectrum
+      the way the paper's areas do;
+    * points are ε-normalized pdfs (:func:`empirical_pdf`), so clustering is
+      by label *distribution*, invariant to client sample counts — an empty
+      (dark/unavailable) client normalizes to uniform and is excluded from
+      centroid updates (it still receives an assignment, but engines never
+      train it: the validity gate masks it out of every reduction);
+    * an empty cluster keeps its previous centroid (the ``where`` guard),
+      mirroring Algorithm 1's count=0 degradation.
+
+    Ties in the distance argmin break toward the lower cluster index — the
+    same deterministic rule on every engine.  ``n_clusters`` and ``n_iters``
+    are static Python ints (they shape the scan), matching the
+    ``SelectionResult.budget`` static-shape contract style.
+    """
+    if n_clusters < 1:
+        raise ValueError(f"n_clusters must be >= 1; got {n_clusters}")
+    p = empirical_pdf(hists)                                 # (N, C)
+    valid = (hists.sum(axis=-1) > 0).astype(jnp.float32)     # (N,)
+    order = jnp.argsort(-selection_priority(hists))
+    n = hists.shape[-2]
+    pos = jnp.round(jnp.linspace(0, n - 1, n_clusters)).astype(jnp.int32)
+    cent0 = p[order[pos]]                                    # (M, C)
+
+    def assign_to(cent: Array) -> Array:
+        d2 = ((p[:, None, :] - cent[None, :, :]) ** 2).sum(-1)   # (N, M)
+        return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+    def step(cent, _):
+        a = assign_to(cent)
+        member = (a[None, :] == jnp.arange(n_clusters)[:, None])  # (M, N)
+        w = member.astype(jnp.float32) * valid[None, :]
+        tot = w.sum(-1, keepdims=True)                            # (M, 1)
+        new = jnp.where(tot > 0, (w @ p) / jnp.maximum(tot, 1.0), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent0, None, length=n_iters)
+    return assign_to(cent), cent
+
+
+def cluster_counts(assign: Array, n_clusters: int,
+                   weights: Array | None = None) -> Array:
+    """(M,) f32 per-cluster population: how many (optionally ``weights``-
+    weighted — pass the validity mask to count live clients only) clients
+    each cluster holds.  The mixture weights the engines use to fold
+    per-cluster eval trajectories into one comparable scalar."""
+    member = (assign[None, :] == jnp.arange(n_clusters)[:, None])
+    w = member.astype(jnp.float32)
+    if weights is not None:
+        w = w * weights.astype(jnp.float32)[None, :]
+    return w.sum(-1)

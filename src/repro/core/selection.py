@@ -180,6 +180,28 @@ def select_entropy(key: Array, hists: Array, n_select: int) -> SelectionResult:
     return SelectionResult(mask, scores, order, budget=_clamped(n_select, hists))
 
 
+def select_labelwise_priority(key: Array, hists: Array,
+                              n_select: int) -> SelectionResult:
+    """§IV-A/B area priority, stated through the AREA INDEX itself: rank by
+    −A_p (A_1 = widest coverage first) with the Eq. (3) σ²/n tie-break inside
+    an area, gated by Algorithm 1's σ² ≠ 0 validity.  Orders identically to
+    ``coverage`` (p = q − cov + 1 with q constant across the round's
+    population), but exposes the clustering module's ``area_index`` as a
+    first-class registered strategy — the wiring that revives
+    ``core.clustering`` inside every engine."""
+    del key
+    from .clustering import area_index
+    from .label_stats import label_variance_normed as _lvn
+    c = hists.shape[-1]
+    p = area_index(hists, None).astype(jnp.float32)
+    # σ²/n < C² (rank values < C); scale the area term safely past it, same
+    # margin as selection_priority.
+    scores = -p * (4.0 * c * c) + _lvn(hists)
+    valid = label_variance(hists) > 0
+    mask, order = _topn_mask(scores, valid, n_select)
+    return SelectionResult(mask, scores, order, budget=_clamped(n_select, hists))
+
+
 def select_full(key: Array, hists: Array, n_select: int) -> SelectionResult:
     del key, n_select  # budget is the whole population, not clients_per_round
     valid = (hists.sum(axis=-1) > 0).astype(jnp.float32)
@@ -274,3 +296,7 @@ for _name, _fn in zip(BUILTIN_STRATEGIES,
                        select_coverage, select_kl, select_entropy, select_full)):
     register_strategy(_name, _fn)
 del _name, _fn
+
+# Post-builtin extension (id 7): core.clustering's area math as a strategy.
+# Appended AFTER the frozen 0..6 block so pre-registry grid indices hold.
+register_strategy("labelwise_priority", select_labelwise_priority)

@@ -1,5 +1,6 @@
 from .client import local_train, local_gradient
-from .round import make_fl_round
+from .round import (clustered_update_step, make_fl_round, resolve_aggregator,
+                    stack_global_params)
 from .workloads import (Workload, get_workload, lm_workload, register_workload,
                         registered_workloads)
 from .loop import run_fl, run_fl_host, FLHistory, success_rate, cnn_batch_loss
@@ -11,9 +12,14 @@ from .experiment import (ExperimentResult, ExperimentSpec, LoweredScenario,
                          ScenarioSpec, TransformSpec, availability, engines,
                          quantity, register_engine, register_transform,
                          registered_transforms, run)
-from repro.core import register_strategy, registered_strategies
+from repro.core import (Aggregator, register_aggregator,
+                        registered_aggregators, register_strategy,
+                        registered_strategies)
 
 __all__ = ["local_train", "local_gradient", "make_fl_round", "run_fl",
+           "clustered_update_step", "resolve_aggregator",
+           "stack_global_params", "Aggregator", "register_aggregator",
+           "registered_aggregators",
            "run_fl_host", "FLHistory", "success_rate", "cnn_batch_loss",
            "Workload", "get_workload", "lm_workload", "register_workload",
            "registered_workloads",

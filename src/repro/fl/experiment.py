@@ -17,7 +17,7 @@ call-site.  Here the whole experiment is DATA:
     res.table1(); res.success_rate()        # paper renderers
     res.to_json()                           # round-trips via from_json
 
-Four orthogonal registries make every axis pluggable without engine edits:
+Five orthogonal registries make every axis pluggable without engine edits:
 
 * **workloads** — ``repro.fl.workloads.register_workload(name, Workload)``:
   what each client trains ("cnn" — the paper model — or "lm" — a micro
@@ -30,6 +30,13 @@ Four orthogonal registries make every axis pluggable without engine edits:
   stack+index dispatch (repro.fl.sim._select) and ids are append-only, so
   saved grid indices never remap.  ``select_dirichlet_uniformity`` below is
   registered purely through that public API as proof.
+* **aggregators** — ``repro.core.aggregation.register_aggregator(name,
+  agg)``: the server-side family (``fedavg``/``fedsgd``, their
+  ``clustered_*`` per-cluster multi-global-model forms, or a registered
+  robust reduction); ``spec.aggregation`` resolves it by name in every
+  engine, clustered families report per-cluster trajectories + round
+  k-means assignments in ``meta["clustered"]``, and ids are append-only
+  like strategies.
 * **transforms** — ``register_transform(kind, fn)``; a ScenarioSpec carries an
   *ordered* list of TransformSpecs (availability dropout, quantity skew, …)
   that lower onto the base plan host-side before the arrays enter a device.
@@ -53,8 +60,9 @@ import numpy as np
 from repro.configs.paper_cnn import FLConfig
 from repro.core import (CASES, SAMPLES_PER_CLIENT, SelectionResult, STRATEGIES,
                         apply_availability, availability_plan, bias_mix_plan,
-                        case_label_plan, dirichlet_plan, get_strategy,
-                        quantity_skew, register_strategy, topn_mask)
+                        case_label_plan, dirichlet_plan, get_aggregator,
+                        get_strategy, quantity_skew, register_strategy,
+                        topn_mask)
 
 # ---------------------------------------------------------------------------
 # Transform registry: kind -> lowering fn(plan, avail, seed, **params)
@@ -395,6 +403,9 @@ class ExperimentSpec:
         if self.engine not in _ENGINES:
             raise KeyError(f"unknown engine {self.engine!r}; have "
                            f"{engines()}")
+        # Unknown aggregation families raise here, pre-compile — the same
+        # fail-fast contract as strategies/engines/workloads.
+        get_aggregator(self.aggregation or self.fl.aggregation)
         from .workloads import get_workload
         get_workload(self.workload)  # unknown workloads raise pre-compile
 
@@ -471,6 +482,19 @@ class ExperimentResult:
     @property
     def final_accuracy(self) -> np.ndarray:
         return self.accuracy[..., -1]
+
+    def cluster_trajectories(self) -> Optional[Dict[str, np.ndarray]]:
+        """Clustered-family detail from ``meta["clustered"]`` as arrays:
+        ``accuracy``/``loss`` (K, S, R, T, n_clusters) per-cluster-model
+        trajectories and ``assign`` (K, S, R, T, N) round k-means
+        assignments.  ``None`` for single-model aggregation families."""
+        cl = self.meta.get("clustered")
+        if cl is None:
+            return None
+        return {"n_clusters": int(cl["n_clusters"]),
+                "accuracy": np.asarray(cl["cluster_accuracy"], np.float32),
+                "loss": np.asarray(cl["cluster_loss"], np.float32),
+                "assign": np.asarray(cl["cluster_assign"], np.int32)}
 
     def success_rate(self, threshold: float = 0.2) -> np.ndarray:
         """Paper Table II: fraction of seeds with final accuracy > τ; (K, S)."""
@@ -575,6 +599,22 @@ def engines() -> Tuple[str, ...]:
     return tuple(_ENGINES)
 
 
+def _clustered_meta(c_acc: np.ndarray, c_loss: np.ndarray,
+                    c_assign: np.ndarray) -> Dict[str, Any]:
+    """The engines' shared JSON-able clustered side-channel: per-cluster
+    trajectories (K, S, R, T, n_clusters) and round k-means assignments
+    (K, S, R, T, N), as nested lists so ``ExperimentResult.to_json``
+    round-trips them exactly."""
+    c_acc = np.asarray(c_acc, np.float32)
+    return {"clustered": {
+        "n_clusters": int(c_acc.shape[-1]),
+        "axes": ["scenario", "strategy", "seed", "round", "cluster"],
+        "assign_axes": ["scenario", "strategy", "seed", "round", "client"],
+        "cluster_accuracy": c_acc.tolist(),
+        "cluster_loss": np.asarray(c_loss, np.float32).tolist(),
+        "cluster_assign": np.asarray(c_assign, np.int32).tolist()}}
+
+
 def _engine_sim(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
     """Compiled vmapped grid: the whole experiment is ONE XLA program."""
     from .sim import grid_arrays
@@ -614,17 +654,29 @@ def _engine_sim(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
                       rounds=spec.rounds, ds=ds, avail=avail,
                       eval_n_per_class=spec.eval_n_per_class,
                       workload=spec.workload)
+    if res.cluster_accuracy is not None:
+        return (res.accuracy, res.loss, res.num_selected, res.wall_s,
+                res.compile_s, _clustered_meta(res.cluster_accuracy,
+                                               res.cluster_loss,
+                                               res.cluster_assign))
     return res.accuracy, res.loss, res.num_selected, res.wall_s, res.compile_s
 
 
 def _engine_host(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
     """Legacy per-round host loop over every grid cell — the parity oracle."""
     from .loop import run_fl_host
+    agg = get_aggregator(spec.aggregation or spec.fl.aggregation)
     k_n, s_n, r_n = len(lowered), len(spec.strategies), len(spec.seeds)
     t_n = spec.num_rounds
     acc = np.zeros((k_n, s_n, r_n, t_n), np.float32)
     loss = np.zeros_like(acc)
     nsel = np.zeros_like(acc)
+    c_acc = c_loss = c_assign = None
+    if agg.clustered:
+        c_acc = np.zeros((k_n, s_n, r_n, t_n, agg.n_clusters), np.float32)
+        c_loss = np.zeros_like(c_acc)
+        c_assign = np.zeros((k_n, s_n, r_n, t_n, spec.fl.num_clients),
+                            np.int32)
     t0 = time.perf_counter()
     for k, low in enumerate(lowered):
         for r, seed in enumerate(spec.seeds):
@@ -638,7 +690,15 @@ def _engine_host(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
                 acc[k, s, r] = h.accuracy
                 loss[k, s, r] = h.loss
                 nsel[k, s, r] = h.num_selected
-    return acc, loss, nsel, time.perf_counter() - t0, 0.0
+                if agg.clustered:
+                    c_acc[k, s, r] = h.cluster_accuracy
+                    c_loss[k, s, r] = h.cluster_loss
+                    c_assign[k, s, r] = h.cluster_assign
+    wall = time.perf_counter() - t0
+    if agg.clustered:
+        return acc, loss, nsel, wall, 0.0, _clustered_meta(c_acc, c_loss,
+                                                           c_assign)
+    return acc, loss, nsel, wall, 0.0
 
 
 def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
@@ -648,8 +708,11 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     training runs only on the ``order[:budget]`` gathered client shards, and
     the weighted delta psum scatters the aggregate back.
 
-    Any registered strategy and fedavg/fedsgd aggregation are supported (each
-    strategy compiles its own round with its own static budget).  Clients are
+    Any registered strategy and any registered ``base`` aggregation family —
+    fedavg/fedsgd and their clustered multi-global-model forms — are
+    supported (each strategy compiles its own round with its own static
+    budget; a custom ``Aggregator.reduce`` override is not, because this
+    round aggregates through the weighted delta-psum collective).  Clients are
     distributed over the mesh in equal blocks: the client axis takes the
     largest device count dividing ``fl.num_clients`` (one client per slice
     when there are enough devices; emulate more with
@@ -675,14 +738,17 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     from repro.data import client_batches
     from repro.optim import get_optimizer
     from .client import local_gradient, local_train
+    from .round import stack_global_params
     from .sharded import make_sharded_fl_round
     from .workloads import get_workload
 
     cfg = spec.fl
-    agg = spec.aggregation or cfg.aggregation
-    if agg not in ("fedavg", "fedsgd"):
+    agg = get_aggregator(spec.aggregation or cfg.aggregation)
+    if agg.reduce is not None:
         raise ValueError(
-            f"engine='sharded' supports fedavg/fedsgd aggregation; got {agg!r}")
+            "engine='sharded' aggregates through the weighted delta-psum "
+            "collective; a custom Aggregator.reduce override is not "
+            "supported — run it on engine='sim' or 'host'")
     n_clients = cfg.num_clients
     ndev = jax.device_count()
     groups = (n_clients if ndev >= n_clients else
@@ -695,9 +761,19 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     eval_batch = wl.eval_set(ds, spec.eval_n_per_class)
     eval_fn = wl.make_eval(ds)
     eval_jit = jax.jit(lambda p: eval_fn(p, eval_batch))
+    if agg.clustered:
+        # Per-cluster eval + the valid-population mixture, the same f32 jnp
+        # ops as the other engines' clustered eval.
+        @jax.jit
+        def eval_mix_jit(p, w):
+            l_c, m_c = jax.vmap(lambda q: eval_fn(q, eval_batch))(p)
+            tot = jnp.maximum(w.sum(), 1.0)
+            return ((l_c * w).sum() / tot,
+                    (m_c["accuracy"] * w).sum() / tot,
+                    m_c["accuracy"], l_c)
     loss_fn = wl.make_loss(ds)
 
-    if agg == "fedavg":
+    if agg.base == "fedavg":
         server_lr = cfg.server_lr
 
         def local_step(params, batch):   # batch: ONE client, no client axis
@@ -718,6 +794,11 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     acc = np.zeros((k_n, s_n, r_n, t_n), np.float32)
     loss = np.zeros_like(acc)
     nsel = np.zeros_like(acc)
+    c_acc = c_loss = c_assign = None
+    if agg.clustered:
+        c_acc = np.zeros((k_n, s_n, r_n, t_n, agg.n_clusters), np.float32)
+        c_loss = np.zeros_like(c_acc)
+        c_assign = np.zeros((k_n, s_n, r_n, t_n, n_clients), np.int32)
     t0 = time.perf_counter()
     # The workload's static shape metadata: params replicated across the
     # client mesh axis, one client-sharded PartitionSpec per batch leaf.
@@ -729,13 +810,16 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
             num_classes=wl.num_classes(ds), params_pspec=pspec,
             batch_pspec={k: P() for k in wl.batch_keys},
             num_clients=n_clients, strategy=strat, server_lr=server_lr,
-            exchange=exchange)
+            exchange=exchange, n_clusters=agg.n_clusters,
+            kmeans_iters=agg.kmeans_iters)
         for strat in spec.strategies}
     for k, low in enumerate(lowered):
         for r, seed in enumerate(spec.seeds):
             plan = low.composed_plan(r)
             key = jax.random.PRNGKey(int(seed))
             init = wl.init(jax.random.fold_in(key, 1), ds)
+            if agg.clustered:
+                init = stack_global_params(init, agg.n_clusters)
             params = {strat: init for strat in spec.strategies}
             for t in range(t_n):
                 # Round data and keys depend only on (scenario, seed, round)
@@ -749,18 +833,31 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
                     params[strat], info = round_fns[strat](
                         params[strat], batches, data["labels"],
                         data["valid"], k_sel)
-                    l, m = eval_jit(params[strat])
-                    acc[k, s, r, t] = float(m["accuracy"])
-                    loss[k, s, r, t] = float(l)
+                    if agg.clustered:
+                        l, a, acc_c, loss_c = eval_mix_jit(
+                            params[strat], info["cluster_weights"])
+                        acc[k, s, r, t] = float(a)
+                        loss[k, s, r, t] = float(l)
+                        c_acc[k, s, r, t] = np.asarray(acc_c, np.float32)
+                        c_loss[k, s, r, t] = np.asarray(loss_c, np.float32)
+                        c_assign[k, s, r, t] = np.asarray(
+                            info["cluster_assign"], np.int32)
+                    else:
+                        l, m = eval_jit(params[strat])
+                        acc[k, s, r, t] = float(m["accuracy"])
+                        loss[k, s, r, t] = float(l)
                     nsel[k, s, r, t] = float(info["num_selected"])
     meta = {"sharded": {
         "groups": groups, "clients": n_clients,
         "clients_per_group": n_clients // groups, "exchange": exchange,
+        "n_clusters": agg.n_clusters,
         "strategies": {
             strat: {"budget": fn.budget,
                     "trained_per_round": fn.trained_per_round,
                     "flop_sparsity": fn.flop_sparsity}
             for strat, fn in round_fns.items()}}}
+    if agg.clustered:
+        meta.update(_clustered_meta(c_acc, c_loss, c_assign))
     return acc, loss, nsel, time.perf_counter() - t0, 0.0, meta
 
 

@@ -27,7 +27,7 @@ import numpy as np
 from repro.core import plan_round
 from repro.data import client_batches
 from repro.models import cnn_loss
-from .round import make_fl_round
+from .round import make_fl_round, resolve_aggregator, stack_global_params
 from .workloads import Workload, get_workload
 
 Array = jax.Array
@@ -36,10 +36,19 @@ PyTree = Any
 
 @dataclasses.dataclass
 class FLHistory:
+    """One trial's trajectories.  For clustered aggregation families
+    (``Aggregator.n_clusters > 1``) ``accuracy``/``loss`` are the
+    valid-population-weighted mixture over the per-cluster models, and the
+    per-cluster detail rides in the optional fields: ``cluster_accuracy`` /
+    ``cluster_loss`` are (rounds, n_clusters) and ``cluster_assign`` is the
+    (rounds, N) round k-means assignment."""
     accuracy: List[float]
     loss: List[float]
     num_selected: List[float]
     wall_s: float
+    cluster_accuracy: Optional[List[List[float]]] = None
+    cluster_loss: Optional[List[List[float]]] = None
+    cluster_assign: Optional[List[List[int]]] = None
 
     @property
     def final_accuracy(self) -> float:
@@ -85,10 +94,20 @@ def run_fl(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
         eval_n_per_class=eval_n_per_class, workload=workload)
     res = experiment.run(spec, ds=ds)
     traj = res.trajectory(scenario.name, spec.strategies[0], spec.seeds[0])
+    cl = res.meta.get("clustered")
+    c_kw = {}
+    if cl is not None:
+        c_kw = {  # the (scenario, strategy, seed) = (0, 0, 0) cell's detail
+            "cluster_accuracy": np.asarray(cl["cluster_accuracy"],
+                                           np.float32)[0, 0, 0].tolist(),
+            "cluster_loss": np.asarray(cl["cluster_loss"],
+                                       np.float32)[0, 0, 0].tolist(),
+            "cluster_assign": np.asarray(cl["cluster_assign"],
+                                         np.int32)[0, 0, 0].tolist()}
     hist = FLHistory([float(a) for a in traj["accuracy"]],
                      [float(l) for l in traj["loss"]],
                      [float(s) for s in traj["num_selected"]],
-                     res.wall_s + res.compile_s)
+                     res.wall_s + res.compile_s, **c_kw)
     if verbose:
         for t, (a, l, s) in enumerate(zip(hist.accuracy, hist.loss,
                                           hist.num_selected)):
@@ -112,14 +131,30 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
     # `is None`, not falsy-or: rounds=0 is a zero-round dry-run (empty
     # history), not a request for the full schedule.
     rounds = fl_cfg.global_epochs if rounds is None else rounds
+    agg = resolve_aggregator(aggregation, fl_cfg)
     key = jax.random.PRNGKey(seed)
     params = wl.init(jax.random.fold_in(key, 1), ds)
-    fl_round = make_fl_round(wl.make_loss(ds), fl_cfg, strategy, aggregation)
+    if agg.clustered:
+        params = stack_global_params(params, agg.n_clusters)
+    fl_round = make_fl_round(wl.make_loss(ds), fl_cfg, strategy, agg)
     eval_batch = wl.eval_set(ds, eval_n_per_class)
     eval_fn = wl.make_eval(ds)
-    eval_jit = jax.jit(lambda p: eval_fn(p, eval_batch))
+    if agg.clustered:
+        # Per-cluster eval + the valid-population mixture — the same f32 jnp
+        # ops as the compiled simulator's scan body, so host≡sim parity holds
+        # for the mixture exactly as it does for the single-model trajectory.
+        @jax.jit
+        def eval_jit(p, w):
+            l_c, m_c = jax.vmap(lambda q: eval_fn(q, eval_batch))(p)
+            tot = jnp.maximum(w.sum(), 1.0)
+            return ((l_c * w).sum() / tot,
+                    {"accuracy": (m_c["accuracy"] * w).sum() / tot},
+                    m_c["accuracy"], l_c)
+    else:
+        eval_jit = jax.jit(lambda p: eval_fn(p, eval_batch))
 
     hist_acc, hist_loss, hist_sel = [], [], []
+    c_acc, c_loss, c_assign = [], [], []
     t0 = time.time()
     for t in range(rounds):
         kt = jax.random.fold_in(key, 1000 + t)
@@ -128,7 +163,14 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
         batches = client_batches(data, fl_cfg.batch_size, wl.batch_keys)
         params, info = fl_round(params, batches, data["hists"],
                                 jax.random.fold_in(kt, 1))
-        loss, m = eval_jit(params)
+        if agg.clustered:
+            loss, m, acc_c, loss_c = eval_jit(params, info["cluster_weights"])
+            c_acc.append(np.asarray(acc_c, np.float32).tolist())
+            c_loss.append(np.asarray(loss_c, np.float32).tolist())
+            c_assign.append(np.asarray(info["cluster_assign"],
+                                       np.int32).tolist())
+        else:
+            loss, m = eval_jit(params)
         ns, ms = float(info["num_selected"]), float(info["mask_sum"])
         assert ns == ms, (
             f"round {t}: selection budget violated — trained {ns} clients but "
@@ -139,7 +181,10 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
         if verbose:
             print(f"  round {t + 1:3d}/{rounds}: acc={hist_acc[-1]:.4f} "
                   f"loss={hist_loss[-1]:.4f} selected={hist_sel[-1]:.0f}")
-    return FLHistory(hist_acc, hist_loss, hist_sel, time.time() - t0)
+    return FLHistory(hist_acc, hist_loss, hist_sel, time.time() - t0,
+                     cluster_accuracy=c_acc if agg.clustered else None,
+                     cluster_loss=c_loss if agg.clustered else None,
+                     cluster_assign=c_assign if agg.clustered else None)
 
 
 def success_rate(histories: List[FLHistory], threshold: float = 0.2) -> float:

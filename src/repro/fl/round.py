@@ -25,7 +25,9 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import get_strategy, interpolate, selection_budget
+from repro.core import (Aggregator, cluster_counts, get_aggregator,
+                        get_strategy, interpolate, kmeans_cluster,
+                        selection_budget)
 from repro.kernels.dispatch import masked_weighted_mean
 from repro.optim import apply_updates, get_optimizer
 from .client import local_train, local_gradient
@@ -34,8 +36,37 @@ Array = jax.Array
 PyTree = Any
 
 
+def resolve_aggregator(agg: "str | Aggregator | None", fl_cfg) -> Aggregator:
+    """Name (or None → ``fl_cfg.aggregation``) → registered Aggregator.
+
+    The trace-time resolution every engine shares: the returned family's
+    ``base``/``n_clusters``/``reduce`` are static Python facts that pick the
+    compiled round's shape."""
+    if isinstance(agg, Aggregator):
+        return agg
+    return get_aggregator(agg or fl_cfg.aggregation)
+
+
+def _reduce_fn(agg: Aggregator):
+    """The family's masked weighted reduction: a registered override, or the
+    backend compute dispatch (resolved HERE, not in repro.core.aggregation —
+    the dispatch module imports core.aggregation, so the registry stores
+    ``None`` and the engines' round math closes the cycle-free direction)."""
+    return agg.reduce if agg.reduce is not None else masked_weighted_mean
+
+
+def stack_global_params(params: PyTree, n_clusters: int) -> PyTree:
+    """Replicate one global model into the (n_clusters, *params) stacked
+    pytree clustered families carry — every cluster starts from the SAME
+    init, which is also what makes the sharded engine's per-cluster delta
+    mean algebraically equal to aggregate-then-interpolate."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n_clusters,) + p.shape), params)
+
+
 def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
-                       live: Array, loss_fn, opt, fl_cfg, agg_kind: str
+                       live: Array, loss_fn, opt, fl_cfg,
+                       agg_kind: "str | Aggregator"
                        ) -> Tuple[PyTree, Dict[str, Array]]:
     """Local training + masked aggregation + server update for the selected
     client subset — the round math shared verbatim by the jitted host round
@@ -49,18 +80,27 @@ def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
     weights.  data_sel: leaves (n_sel, n_batches, batch_size, ...); live:
     (n_sel,) 0/1.  Returns (new_global_params, per-client metrics).
 
-    The FedAvg/FedSGD reduction routes through the backend compute dispatch
-    (repro.kernels.dispatch.masked_weighted_mean): the fused Pallas
-    weighted-agg kernel on TPU, ``masked_mean`` — the parity-pinned
-    reference — on CPU.
+    ``agg_kind`` is an aggregator name (repro.core.aggregation registry) or a
+    resolved :class:`Aggregator`.  The family's reduction defaults to the
+    backend compute dispatch (repro.kernels.dispatch.masked_weighted_mean):
+    the fused Pallas weighted-agg kernel on TPU, ``masked_mean`` — the
+    parity-pinned reference — on CPU; a registered ``reduce`` override
+    (robust aggregation) slots in here without engine edits.
     """
+    agg = resolve_aggregator(agg_kind, fl_cfg)
+    if agg.clustered:
+        raise ValueError(
+            "client_update_step is the single-global-model round; clustered "
+            "families go through clustered_update_step (the engines branch "
+            "on Aggregator.clustered at trace time)")
+    reduce = _reduce_fn(agg)
     n_sel = live.shape[0]
     sizes = data_sel["valid"].reshape(n_sel, -1).sum(-1).astype(jnp.float32)
 
-    if agg_kind == "fedsgd":
+    if agg.base == "fedsgd":
         grads, m = jax.vmap(
             lambda b: local_gradient(global_params, b, loss_fn))(data_sel)
-        agg_g = masked_weighted_mean(grads, live, sizes)
+        agg_g = reduce(grads, live, sizes)
         new_params = apply_updates(
             global_params,
             jax.tree_util.tree_map(lambda g: -fl_cfg.lr * g, agg_g))
@@ -68,8 +108,8 @@ def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
         trained, m = jax.vmap(
             lambda b: local_train(global_params, opt, b, loss_fn,
                                   fl_cfg.local_epochs))(data_sel)
-        agg = masked_weighted_mean(trained, live, sizes)
-        new_params = interpolate(global_params, agg, fl_cfg.server_lr)
+        agg_p = reduce(trained, live, sizes)
+        new_params = interpolate(global_params, agg_p, fl_cfg.server_lr)
 
     # Algorithm 1's count=0 degradation: an empty selection must leave the
     # global params untouched (the ε-denominator mean would zero them).
@@ -80,6 +120,60 @@ def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
     return new_params, m
 
 
+def clustered_update_step(global_stack: PyTree, cluster_sel: Array,
+                          data_sel: Dict[str, Array], live: Array,
+                          loss_fn, opt, fl_cfg, agg: Aggregator
+                          ) -> Tuple[PyTree, Dict[str, Array]]:
+    """The clustered round math: per-cluster global models, shared by the
+    compiled simulator and the jitted host round (the sharded round reaches
+    the same numbers through its delta-psum form — Σw(θ'−θ_c)/Σw = θ̄_c − θ_c
+    because every cluster member trains from the same θ_c).
+
+    ``global_stack`` leaves are (n_clusters, ...); ``cluster_sel`` is the
+    (n_sel,) int32 cluster id of each gathered training slot (``assign[idx]``
+    from :func:`repro.core.clustering.kmeans_cluster`).  Each slot trains
+    from ITS cluster's model; each cluster then reduces ONLY its own live
+    slots (membership × live mask) through the family's reduction and applies
+    the base rule's server update.  A cluster with no live member this round
+    keeps its model bit-identically (the per-cluster count=0 guard —
+    Algorithm 1's degradation, per model)."""
+    reduce = _reduce_fn(agg)
+    m_clusters = agg.n_clusters
+    n_sel = live.shape[0]
+    sizes = data_sel["valid"].reshape(n_sel, -1).sum(-1).astype(jnp.float32)
+    params_sel = jax.tree_util.tree_map(lambda g: g[cluster_sel], global_stack)
+    # (M, n_sel) per-cluster live masks: slot s enters cluster c's reduction
+    # iff it is live AND assigned to c.
+    member = (cluster_sel[None, :] == jnp.arange(m_clusters)[:, None])
+    live_mc = member.astype(live.dtype) * live[None, :]
+
+    if agg.base == "fedsgd":
+        grads, m = jax.vmap(
+            lambda p, b: local_gradient(p, b, loss_fn))(params_sel, data_sel)
+
+        def update_one(g_c, live_c):
+            agg_g = reduce(grads, live_c, sizes)
+            return apply_updates(
+                g_c, jax.tree_util.tree_map(lambda g: -fl_cfg.lr * g, agg_g))
+    else:
+        trained, m = jax.vmap(
+            lambda p, b: local_train(p, opt, b, loss_fn,
+                                     fl_cfg.local_epochs))(params_sel, data_sel)
+
+        def update_one(g_c, live_c):
+            agg_p = reduce(trained, live_c, sizes)
+            return interpolate(g_c, agg_p, fl_cfg.server_lr)
+
+    new_stack = jax.vmap(update_one)(global_stack, live_mc)
+    any_live_c = live_mc.sum(-1) > 0                       # (M,)
+    new_stack = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(
+            any_live_c.reshape((m_clusters,) + (1,) * (new.ndim - 1)),
+            new, old),
+        new_stack, global_stack)
+    return new_stack, m
+
+
 def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
                   aggregation: str | None = None) -> Callable:
     """Build the jitted round function.
@@ -88,9 +182,15 @@ def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
         round_batches: leaves (N, n_batches, batch_size, ...)
         hists: (N, C)
     → (new_global_params, info dict)
+
+    Clustered families (``Aggregator.n_clusters > 1``) take and return the
+    (n_clusters, *params) stacked pytree instead (``stack_global_params``
+    builds the initial one) and add ``info["cluster_assign"]`` — the (N,)
+    round k-means assignment — and ``info["cluster_weights"]`` — the (M,)
+    valid-client population per cluster, the caller's eval mixture weights.
     """
     strategy = get_strategy(strategy_name or fl_cfg.selection)
-    agg_kind = aggregation or fl_cfg.aggregation
+    agg = resolve_aggregator(aggregation, fl_cfg)
     n_sel = fl_cfg.clients_per_round
     opt = get_optimizer(fl_cfg.optimizer, fl_cfg.lr)
 
@@ -105,10 +205,23 @@ def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
         idx = sel.order[:budget]                      # clients asked to train
         live = sel.mask[idx]                          # 0 where count < budget
         data_sel = jax.tree_util.tree_map(lambda x: x[idx], round_batches)
-        new_params, m = client_update_step(global_params, data_sel, live,
-                                           loss_fn, opt, fl_cfg, agg_kind)
+        extra = {}
+        if agg.clustered:
+            assign, _ = kmeans_cluster(hists, agg.n_clusters,
+                                       n_iters=agg.kmeans_iters)
+            new_params, m = clustered_update_step(
+                global_params, assign[idx], data_sel, live, loss_fn, opt,
+                fl_cfg, agg)
+            valid = (hists.sum(-1) > 0).astype(jnp.float32)
+            extra = {"cluster_assign": assign,
+                     "cluster_weights": cluster_counts(assign, agg.n_clusters,
+                                                       weights=valid)}
+        else:
+            new_params, m = client_update_step(global_params, data_sel, live,
+                                               loss_fn, opt, fl_cfg, agg)
 
         info = {
+            **extra,
             "selected": idx,
             "live": live,
             "num_selected": live.sum(),

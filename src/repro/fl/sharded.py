@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.clustering import cluster_counts, kmeans_cluster
 from repro.core.selection import (SelectFn, SelectionResult, get_strategy,
                                   selection_budget, topn_mask)
 from repro.core.aggregation import (exchange_selected_shards,
@@ -128,7 +129,9 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
                           strategy: Union[str, SelectFn] = "labelwise",
                           server_lr: float = 1.0,
                           mode: str = "gather",
-                          exchange: str = "a2a") -> Callable:
+                          exchange: str = "a2a",
+                          n_clusters: int = 1,
+                          kmeans_iters: int = 4) -> Callable:
     """Build the SPMD FL round.
 
     ``local_step(params, batch) -> params`` is ONE client's local training
@@ -158,6 +161,20 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
     exactly one owning shard), pinned by the sharded subprocess parity test;
     :func:`exchange_bytes_per_device` gives the analytic ring-byte cost of
     each.
+
+    ``n_clusters > 1`` is the CLUSTERED round (Aggregator families such as
+    ``clustered_fedavg``): ``params`` leaves carry a leading (n_clusters,)
+    axis (replicated — :func:`repro.fl.round.stack_global_params` builds the
+    initial stack), every shard computes the same deterministic
+    ``kmeans_cluster`` assignment from the replicated histogram matrix, each
+    gathered slot trains from ITS cluster's model, and the weighted-delta
+    psum runs once per cluster over membership-masked weights.  Because all
+    of cluster c's members start from the same θ_c, the per-cluster delta
+    mean equals the other engines' aggregate-then-interpolate algebraically;
+    a cluster with no live member gets an exact-zero delta (ε denominator)
+    and keeps its model.  ``info`` gains the replicated ``cluster_assign``
+    (N,) and ``cluster_weights`` (n_clusters,) valid-population mixture
+    weights.
 
     ``with_availability=True`` adds a trailing ``avail`` argument — a (N,)
     0/1 per-client availability vector (repro.core.noniid.availability_plan
@@ -224,8 +241,42 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
             my_batch = batch
         live = sel.mask[my_slots]           # 0 on dead/padded slots
 
-        new_local = jax.vmap(local_step, in_axes=(None, 0))(params, my_batch)
         dt = agg_dtype or jnp.float32
+        if n_clusters > 1:
+            # Replicated, deterministic — every shard computes the identical
+            # assignment from the identical all-gathered histogram matrix.
+            assign, _ = kmeans_cluster(hists_all, n_clusters,
+                                       n_iters=kmeans_iters)
+            cl_my = assign[my_slots]                       # (slots,)
+            params_slot = jax.tree_util.tree_map(
+                lambda g: g[cl_my], params)                # each slot's θ_c
+            new_local = jax.vmap(local_step)(params_slot, my_batch)
+            delta = jax.tree_util.tree_map(
+                lambda a, b: (a.astype(jnp.float32)
+                              - b.astype(jnp.float32)).astype(dt),
+                new_local, params_slot)
+            w = live * sizes[my_slots]
+            member = (cl_my[None, :] == jnp.arange(n_clusters)[:, None])
+            w_mc = member.astype(w.dtype) * w[None, :]     # (M, slots)
+            # One weighted delta-psum per cluster (vmapped over the
+            # membership-masked weight rows); a memberless cluster's
+            # numerator is exactly zero, so its model survives unchanged.
+            agg_delta = jax.vmap(
+                lambda wc: psum_weighted_mean(delta, wc, client_axis,
+                                              local_sum=weighted_sum_tree)
+            )(w_mc)
+            new_global = jax.tree_util.tree_map(
+                lambda p, d: (p.astype(jnp.float32)
+                              + server_lr * d).astype(p.dtype),
+                params, agg_delta)
+            valid_all = (hists_all.sum(-1) > 0).astype(jnp.float32)
+            info = {"mask": sel.mask, "num_selected": sel.mask.sum(),
+                    "scores": sel.scores, "cluster_assign": assign,
+                    "cluster_weights": cluster_counts(assign, n_clusters,
+                                                      weights=valid_all)}
+            return new_global, info
+
+        new_local = jax.vmap(local_step, in_axes=(None, 0))(params, my_batch)
         # Aggregating DELTAS (not params) tolerates low precision: bf16
         # halves the cross-pod all-reduce bytes (§Perf, FL-round lever).
         delta = jax.tree_util.tree_map(
@@ -254,6 +305,8 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
         is_leaf=lambda x: isinstance(x, P))
     lv_spec = P(client_axis)
     out_info_spec = {"mask": P(), "num_selected": P(), "scores": P()}
+    if n_clusters > 1:   # replicated clustering facts join the info pytree
+        out_info_spec.update({"cluster_assign": P(), "cluster_weights": P()})
 
     in_specs = (params_pspec, batch_specs, lv_spec, lv_spec, P())
     if with_availability:
@@ -273,6 +326,7 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
     wrapper.flop_sparsity = 1.0 - trained_per_round / n_clients
     wrapper.mode = mode
     wrapper.exchange = exchange if mode == "gather" else None
+    wrapper.n_clusters = n_clusters
     return wrapper
 
 

@@ -48,11 +48,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (STRATEGIES, registered_strategies, selection_budget,
-                        strategy_id)
+from repro.core import (STRATEGIES, cluster_counts, kmeans_cluster,
+                        registered_strategies, selection_budget, strategy_id)
 from repro.data import client_batches
 from repro.optim import get_optimizer
-from .round import client_update_step
+from .round import (client_update_step, clustered_update_step,
+                    resolve_aggregator, stack_global_params)
 from .workloads import Workload, get_workload
 
 Array = jax.Array
@@ -75,12 +76,21 @@ class GridResult:
 
     Leading axes follow the call: (*grid_axes, rounds) where grid_axes is
     (cases, strategies, seeds) for run_grid, or () for simulate.
+
+    Clustered aggregation families fill the optional per-cluster fields:
+    ``accuracy``/``loss`` become the valid-population-weighted mixture over
+    the n_clusters models, ``cluster_accuracy``/``cluster_loss`` carry the
+    (*grid_axes, rounds, n_clusters) per-model trajectories and
+    ``cluster_assign`` the (*grid_axes, rounds, N) round k-means assignment.
     """
     accuracy: np.ndarray
     loss: np.ndarray
     num_selected: np.ndarray
     wall_s: float
     compile_s: float = 0.0
+    cluster_accuracy: Optional[np.ndarray] = None
+    cluster_loss: Optional[np.ndarray] = None
+    cluster_assign: Optional[np.ndarray] = None
 
     @property
     def final_accuracy(self) -> np.ndarray:
@@ -151,6 +161,13 @@ def make_trial_fn(fl_cfg, ds=None, *,
     is a Workload instance — whose traced init/materialize/loss/eval fns are
     compiled into the scan body; this engine contains no workload-specific
     code.  ``ds`` overrides the workload's default dataset.
+
+    ``aggregation`` resolves through the aggregator registry
+    (repro.core.aggregation).  A clustered family extends the return to
+    seven trajectories: the scalar accuracy/loss become the
+    valid-population-weighted mixture over the per-cluster models, followed
+    by (rounds, n_clusters) per-cluster accuracy/loss and the (rounds, N)
+    round k-means assignment.
     """
     wl = get_workload(workload)
     ds = wl.dataset(ds)
@@ -158,7 +175,7 @@ def make_trial_fn(fl_cfg, ds=None, *,
                 else registered_strategies())
     for name in universe:
         strategy_id(name)  # validate early: unknown names raise here
-    agg_kind = aggregation or fl_cfg.aggregation
+    agg = resolve_aggregator(aggregation, fl_cfg)
     n_sel = fl_cfg.clients_per_round
     # `is None`, not falsy-or: rounds=0 is a legitimate zero-round dry-run
     # (empty trajectories), not a request for the full schedule.
@@ -172,6 +189,8 @@ def make_trial_fn(fl_cfg, ds=None, *,
         t_static = plan.shape[0]
         key = jax.random.PRNGKey(seed)
         params = wl.init(jax.random.fold_in(key, 1), ds)
+        if agg.clustered:
+            params = stack_global_params(params, agg.n_clusters)
 
         def round_body(params, t):
             # Same fold_in tree as the host loop — parity is bit-for-bit in
@@ -199,22 +218,52 @@ def make_trial_fn(fl_cfg, ds=None, *,
             idx = order[:budget]          # the strategy's static gather width
             live = mask[idx]
             data_sel = jax.tree_util.tree_map(lambda x: x[idx], batches)
+            if agg.clustered:
+                assign, _ = kmeans_cluster(hists, agg.n_clusters,
+                                           n_iters=agg.kmeans_iters)
+                new_params, m = clustered_update_step(
+                    params, assign[idx], data_sel, live, loss_fn, opt,
+                    fl_cfg, agg)
+                loss_c, ev_m = jax.vmap(
+                    lambda p: eval_fn(p, eval_batch))(new_params)
+                acc_c = ev_m["accuracy"]
+                # The scalar trajectory is the mixture over per-cluster
+                # models, weighted by each cluster's VALID population (every
+                # client the round could have trained, not just the selected
+                # ones) — a single comparable number against the one-model
+                # baseline.
+                valid = (hists.sum(-1) > 0).astype(jnp.float32)
+                w = cluster_counts(assign, agg.n_clusters, weights=valid)
+                tot = jnp.maximum(w.sum(), 1.0)
+                return new_params, ((acc_c * w).sum() / tot,
+                                    (loss_c * w).sum() / tot,
+                                    live.sum(), mask.sum(),
+                                    acc_c, loss_c, assign)
             new_params, m = client_update_step(params, data_sel, live,
-                                               loss_fn, opt, fl_cfg, agg_kind)
+                                               loss_fn, opt, fl_cfg, agg)
 
             ev_loss, ev_m = eval_fn(new_params, eval_batch)
             return new_params, (ev_m["accuracy"], ev_loss, live.sum(),
                                 mask.sum())
 
-        _, (acc, loss, nsel, msum) = jax.lax.scan(round_body, params,
-                                                  jnp.arange(num_rounds))
-        return acc, loss, nsel, msum
+        _, traj = jax.lax.scan(round_body, params, jnp.arange(num_rounds))
+        return traj
 
     return trial
 
 
 def _ones_avail(plan: np.ndarray) -> jnp.ndarray:
     return jnp.ones(plan.shape[:2], jnp.float32)
+
+
+def _cluster_fields(out: tuple) -> dict:
+    """GridResult kwargs for a trial fn's clustered tail (empty when the
+    aggregation family is single-model and the tuple has just 4 entries)."""
+    if len(out) <= 4:
+        return {}
+    return {"cluster_accuracy": np.asarray(out[4]),
+            "cluster_loss": np.asarray(out[5]),
+            "cluster_assign": np.asarray(out[6])}
 
 
 def _assert_budget_invariant(nsel, msum) -> None:
@@ -248,12 +297,14 @@ def simulate(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
     lowered = fn.lower(jnp.asarray(plan, jnp.int32), sid, jnp.int32(seed), av)
     compiled = lowered.compile()
     t1 = time.perf_counter()
-    acc, loss, nsel, msum = jax.block_until_ready(
+    out = jax.block_until_ready(
         compiled(jnp.asarray(plan, jnp.int32), sid, jnp.int32(seed), av))
     t2 = time.perf_counter()
+    acc, loss, nsel, msum = out[:4]
     _assert_budget_invariant(nsel, msum)
     return GridResult(np.asarray(acc), np.asarray(loss), np.asarray(nsel),
-                      wall_s=t2 - t1, compile_s=t1 - t0)
+                      wall_s=t2 - t1, compile_s=t1 - t0,
+                      **_cluster_fields(out))
 
 
 def run_grid(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
@@ -295,8 +346,13 @@ def run_grid(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
         engine="sim", fl=fl_cfg, aggregation=aggregation, rounds=rounds,
         eval_n_per_class=eval_n_per_class, workload=workload)
     res = experiment.run(spec, ds=ds)
+    cl = res.meta.get("clustered")
+    extra = {} if cl is None else {
+        "cluster_accuracy": np.asarray(cl["cluster_accuracy"], np.float32),
+        "cluster_loss": np.asarray(cl["cluster_loss"], np.float32),
+        "cluster_assign": np.asarray(cl["cluster_assign"], np.int32)}
     return GridResult(res.accuracy, res.loss, res.num_selected,
-                      wall_s=res.wall_s, compile_s=res.compile_s)
+                      wall_s=res.wall_s, compile_s=res.compile_s, **extra)
 
 
 def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
@@ -343,11 +399,13 @@ def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
     t0 = time.perf_counter()
     compiled = fn.lower(*args).compile()
     t1 = time.perf_counter()
-    acc, loss, nsel, msum = jax.block_until_ready(compiled(*args))
+    out = jax.block_until_ready(compiled(*args))
     t2 = time.perf_counter()
+    acc, loss, nsel, msum = out[:4]
     _assert_budget_invariant(nsel, msum)
     return GridResult(np.asarray(acc), np.asarray(loss), np.asarray(nsel),
-                      wall_s=t2 - t1, compile_s=t1 - t0)
+                      wall_s=t2 - t1, compile_s=t1 - t0,
+                      **_cluster_fields(out))
 
 
 def stack_case_plans(cases: Sequence[str], fl_cfg, *, seed0: int = 0,

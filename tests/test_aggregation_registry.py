@@ -1,0 +1,150 @@
+"""Aggregation-registry contract (fast tier).
+
+Mirrors the strategy registry's pins (tests/test_selection_budget.py,
+test_experiment.py::TestStrategyRegistry) for the fifth registry axis:
+
+* builtins own ids 0..3 and never move; new names append; overwrite keeps
+  the id; unknown names die at ``ExperimentSpec.validate()``, pre-compile;
+* a registered :data:`AggregateFn` callable compiles straight into the sim
+  scan body (and the host round) without engine edits;
+* the fedavg extraction behind the registry is BIT-identical: spelling the
+  builtin's own reduction as a custom override reproduces the trajectory
+  exactly, so the pre-registry host≡sim parity pins cannot have moved.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import FLConfig
+from repro.core import (AGGREGATORS, BUILTIN_AGGREGATORS, Aggregator,
+                        aggregator_id, case_label_plan, get_aggregator,
+                        register_aggregator, registered_aggregators)
+from repro.fl import ExperimentSpec, ScenarioSpec, run, run_fl_host
+
+MICRO = FLConfig(num_clients=6, clients_per_round=2, global_epochs=2,
+                 local_epochs=1, batch_size=8, lr=1e-3)
+
+
+def micro_plan(case="case1b", seed=3, rounds=2, clients=6, spc=8):
+    return case_label_plan(case, seed=seed, num_rounds=rounds,
+                           num_clients=clients, samples_per_client=spc,
+                           majority=int(spc * 200 / 290))
+
+
+class TestRegistryContract:
+    def test_builtin_ids_pinned(self):
+        names = registered_aggregators()
+        assert names[:4] == BUILTIN_AGGREGATORS == (
+            "fedavg", "fedsgd", "clustered_fedavg", "clustered_fedsgd")
+        for i, name in enumerate(BUILTIN_AGGREGATORS):
+            assert aggregator_id(name) == i
+        assert get_aggregator("fedavg").base == "fedavg"
+        assert not get_aggregator("fedavg").clustered
+        assert get_aggregator("clustered_fedavg").n_clusters == 2
+        assert get_aggregator("clustered_fedsgd").base == "fedsgd"
+
+    def test_register_appends_stable_ids_and_overwrite_keeps_id(self):
+        before = registered_aggregators()
+        register_aggregator("_test_agg_append", Aggregator("fedavg"),
+                            overwrite=True)
+        after = registered_aggregators()
+        assert after[:len(before)] == before or "_test_agg_append" in before
+        aid = aggregator_id("_test_agg_append")
+        assert aid == after.index("_test_agg_append")
+        # overwrite swaps the family but keeps the id
+        register_aggregator("_test_agg_append",
+                            Aggregator("fedsgd", n_clusters=3),
+                            overwrite=True)
+        assert aggregator_id("_test_agg_append") == aid
+        assert registered_aggregators() == after
+        assert AGGREGATORS["_test_agg_append"].n_clusters == 3
+
+    def test_duplicate_without_overwrite_raises(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_aggregator("fedavg", Aggregator("fedavg"))
+
+    def test_bare_callable_wraps_as_fedavg_reduce(self):
+        fn = lambda stacked, live, sizes: stacked
+        agg = register_aggregator("_test_agg_bare", fn, overwrite=True)
+        assert isinstance(agg, Aggregator)
+        assert agg.base == "fedavg" and agg.n_clusters == 1
+        assert agg.reduce is fn
+
+    def test_bad_registrations_raise(self):
+        with pytest.raises(ValueError, match="non-empty str"):
+            register_aggregator("", Aggregator("fedavg"))
+        with pytest.raises(TypeError, match="Aggregator or a callable"):
+            register_aggregator("_test_agg_bad", 42, overwrite=True)
+        with pytest.raises(ValueError, match="fedavg"):
+            Aggregator(base="median")
+        with pytest.raises(ValueError, match="n_clusters"):
+            Aggregator(base="fedavg", n_clusters=0)
+
+    def test_unknown_name_raises_at_validate(self):
+        spec = ExperimentSpec(
+            scenarios=(ScenarioSpec.from_case("iid", samples_per_client=8),),
+            strategies=("random",), seeds=(0,), fl=MICRO,
+            aggregation="_test_agg_never_registered")
+        with pytest.raises(KeyError, match="unknown aggregator"):
+            spec.validate()
+
+    def test_unknown_id_lookup_raises(self):
+        with pytest.raises(KeyError, match="unknown aggregator"):
+            aggregator_id("_test_agg_never_registered")
+        with pytest.raises(KeyError, match="unknown aggregator"):
+            get_aggregator("_test_agg_never_registered")
+
+
+class TestRegisteredAggregatorCompiles:
+    def _spec(self, aggregation):
+        return ExperimentSpec(
+            scenarios=(ScenarioSpec.from_case("case1b", samples_per_client=8),),
+            strategies=("random",), seeds=(0,), engine="sim", fl=MICRO,
+            aggregation=aggregation, eval_n_per_class=2)
+
+    def test_custom_reduce_compiles_into_sim_scan(self):
+        """A registered AggregateFn traces into the compiled trial: pick
+        client 0's update unconditionally (ignore live/sizes) — a degenerate
+        'reduction' that still produces a finite, runnable trajectory and
+        provably routes through the override (it diverges from fedavg)."""
+        def first_client(stacked, live, sizes):
+            del live, sizes
+            return jax.tree_util.tree_map(lambda x: x[0], stacked)
+        register_aggregator("_test_agg_first", first_client, overwrite=True)
+        res = run(self._spec("_test_agg_first"))
+        assert res.accuracy.shape == (1, 1, 1, MICRO.global_epochs)
+        assert np.isfinite(res.loss).all()
+        base = run(self._spec("fedavg"))
+        assert not np.array_equal(res.loss, base.loss)
+
+    def test_builtin_fedavg_extraction_bit_identical(self):
+        """Three spellings of the same family — default (aggregation=None →
+        fl.aggregation), the builtin name, and a custom registration whose
+        reduce IS the dispatch reduction the builtin resolves to — must give
+        byte-equal trajectories on sim AND host: the registry extraction
+        moved no numerics, so the historic ~1e-7 parity pins stand."""
+        from repro.kernels.dispatch import masked_weighted_mean
+        register_aggregator(
+            "_test_agg_fedavg_spelled",
+            Aggregator(base="fedavg", reduce=masked_weighted_mean),
+            overwrite=True)
+        res_default = run(self._spec(None))
+        res_named = run(self._spec("fedavg"))
+        res_spelled = run(self._spec("_test_agg_fedavg_spelled"))
+        for res in (res_named, res_spelled):
+            np.testing.assert_array_equal(res.accuracy, res_default.accuracy)
+            np.testing.assert_array_equal(res.loss, res_default.loss)
+            np.testing.assert_array_equal(res.num_selected,
+                                          res_default.num_selected)
+        h1 = run_fl_host(micro_plan(), MICRO, strategy="random",
+                         eval_n_per_class=2)
+        h2 = run_fl_host(micro_plan(), MICRO, strategy="random",
+                         aggregation="_test_agg_fedavg_spelled",
+                         eval_n_per_class=2)
+        assert h1.accuracy == h2.accuracy and h1.loss == h2.loss
+
+    def test_fedsgd_family_differs_from_fedavg(self):
+        res_avg = run(self._spec("fedavg"))
+        res_sgd = run(self._spec("fedsgd"))
+        assert res_avg.accuracy.shape == res_sgd.accuracy.shape
+        assert not np.array_equal(res_avg.loss, res_sgd.loss)

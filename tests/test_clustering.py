@@ -1,0 +1,271 @@
+"""Unit tests for the paper's clustering math (repro.core.clustering).
+
+Pins §IV-A/B semantics on randomized label histograms (hypothesis-style:
+many numpy-seeded draws per property, shrunk cases printed on failure):
+
+* area_index counts DOWN with coverage — A_1 is the full-coverage area;
+* Eq. (4) F(τ) = τ² − τ + 1 against brute-force enumeration of label-
+  membership patterns (exact for τ ≤ 3, where all 2^τ − 1 non-empty
+  patterns fit under the bound);
+* selection_priority is a total order: area index first, Eq. (3) σ²/n
+  variance tie-break inside an area;
+* kmeans_cluster determinism/shape/validity properties that the engines'
+  bit-parity relies on.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (area_counts, area_index, cluster_counts,
+                        cluster_membership, cluster_sizes,
+                        greedy_area_selection, kmeans_cluster,
+                        num_areas_upper_bound, select_labelwise_priority,
+                        selection_priority)
+from repro.core.label_stats import coverage, label_variance_normed
+
+N_DRAWS = 25  # randomized property repetitions per test
+
+
+def random_hists(rng, n=12, c=6, density=0.5, max_count=40):
+    """Random (N, C) label histogram: each client holds a random label
+    subset (at least one non-empty client overall)."""
+    member = rng.random((n, c)) < density
+    if not member.any():
+        member[rng.integers(n), rng.integers(c)] = True
+    counts = rng.integers(1, max_count, size=(n, c))
+    return (member * counts).astype(np.int64)
+
+
+class TestAreaIndex:
+    def test_area_counts_down_with_coverage(self):
+        """p = q − cov + 1: strictly decreasing in coverage, A_1 ⇔ a client
+        holding every label in play."""
+        rng = np.random.default_rng(0)
+        for _ in range(N_DRAWS):
+            h = random_hists(rng)
+            q = int((h > 0).any(axis=0).sum())
+            p = np.asarray(area_index(h, None))
+            cov = np.asarray(coverage(h))
+            np.testing.assert_array_equal(p, q - cov + 1)
+            # wider coverage ⇒ strictly smaller (higher-priority) area index
+            order = np.argsort(cov)
+            assert (np.diff(p[order]) <= 0).all()
+            assert ((p == 1) == (cov == q)).all()
+
+    def test_full_coverage_client_is_area_one(self):
+        h = np.zeros((4, 5), np.int64)
+        h[0] = 1                      # holds every class → A_1
+        h[1, :3] = 2                  # 3 of 5
+        h[2, 0] = 7                   # single label → A_q
+        h[3, 0] = 0                   # dark client: coverage 0 → p = q + 1
+        p = np.asarray(area_index(h, None))
+        assert p[0] == 1
+        assert p[2] == 5              # q = 5 active labels, cov = 1
+        assert p[3] == 6              # off the end: beyond the last area
+        assert p[1] == 3
+
+    def test_area_counts_histogram(self):
+        h = np.zeros((3, 4), np.int64)
+        h[0] = 1
+        h[1] = 1
+        h[2, 0] = 1
+        counts = np.asarray(area_counts(h, 4))
+        assert counts[1] == 2 and counts[4] == 1
+        assert counts.sum() == 3
+
+
+class TestEq4Bound:
+    def test_polynomial_values(self):
+        taus = np.arange(1, 12)
+        np.testing.assert_array_equal(np.asarray(num_areas_upper_bound(taus)),
+                                      taus * taus - taus + 1)
+
+    @pytest.mark.parametrize("tau", [1, 2, 3])
+    def test_exact_for_small_tau_by_enumeration(self, tau):
+        """Brute force: all 2^τ − 1 non-empty membership patterns realized at
+        once.  For τ ≤ 3, 2^τ − 1 ≤ F(τ) with equality, so the bound is
+        tight and the enumeration meets it exactly."""
+        patterns = [[(m >> k) & 1 for k in range(tau)]
+                    for m in range(1, 2 ** tau)]
+        h = np.asarray(patterns, np.int64)
+        n_patterns = len({tuple(r) for r in (h > 0).tolist()})
+        bound = int(num_areas_upper_bound(tau))
+        assert n_patterns == 2 ** tau - 1 == bound
+
+    def test_bound_holds_on_random_histograms(self):
+        """n(A^(T)) — distinct realized area indices — never exceeds F(τ)
+        where τ = n(ℒ^(T)) is the number of active labels."""
+        rng = np.random.default_rng(1)
+        for _ in range(N_DRAWS):
+            c = int(rng.integers(2, 8))
+            h = random_hists(rng, n=int(rng.integers(2, 20)), c=c,
+                             density=float(rng.uniform(0.2, 0.9)))
+            tau = int((h > 0).any(axis=0).sum())
+            p = np.asarray(area_index(h, None))
+            live = np.asarray(h.sum(-1) > 0)
+            n_areas = len(np.unique(p[live]))
+            assert n_areas <= int(num_areas_upper_bound(tau))
+
+    def test_membership_and_sizes(self):
+        h = np.array([[3, 0, 1], [0, 2, 0]], np.int64)
+        m = np.asarray(cluster_membership(h))
+        np.testing.assert_array_equal(m, [[1, 0, 1], [0, 1, 0]])
+        np.testing.assert_array_equal(np.asarray(cluster_sizes(h)), [1, 1, 1])
+
+
+class TestSelectionPriority:
+    def test_total_order_area_first_variance_tiebreak(self):
+        """Priority sorts by area (coverage) first; inside an equal-coverage
+        area, by the Eq. (3) normalized variance σ²(L_i)/n_i.  The tie-break
+        is asserted non-strictly on random draws (variance gaps below the f32
+        ulp at the coverage scale collapse to equal scores); a deterministic
+        well-separated case below pins the strict ordering."""
+        rng = np.random.default_rng(2)
+        for _ in range(N_DRAWS):
+            h = random_hists(rng)
+            s = np.asarray(selection_priority(h))
+            cov = np.asarray(coverage(h))
+            var_n = np.asarray(label_variance_normed(h))
+            for i in range(len(s)):
+                for j in range(len(s)):
+                    if cov[i] > cov[j]:
+                        assert s[i] > s[j], (i, j, cov[i], cov[j])
+                    elif cov[i] == cov[j] and var_n[i] > var_n[j]:
+                        assert s[i] >= s[j]
+
+    def test_variance_tiebreak_strict_when_separated(self):
+        """Same coverage, clearly separated Eq. (3) scores → strict order."""
+        # ranks are remapped per present label, so two-label clients differ
+        # only through count balance and size: balanced tiny client 0 has a
+        # larger σ²/n than the imbalanced larger client 1
+        h = np.zeros((2, 4), np.int64)
+        h[0, 0], h[0, 1] = 1, 1
+        h[1, 0], h[1, 1] = 1, 3
+        s = np.asarray(selection_priority(h))
+        cov = np.asarray(coverage(h))
+        var_n = np.asarray(label_variance_normed(h))
+        assert cov[0] == cov[1] and var_n[0] > var_n[1]
+        assert s[0] > s[1]
+
+    def test_greedy_selection_is_priority_argsort_prefix(self):
+        rng = np.random.default_rng(3)
+        h = random_hists(rng)
+        top = np.asarray(greedy_area_selection(h, 4))
+        full = np.argsort(-np.asarray(selection_priority(h)), kind="stable")
+        # same priority multiset in the prefix (argsort tie order may differ)
+        assert sorted(np.asarray(selection_priority(h))[top]) == \
+            sorted(np.asarray(selection_priority(h))[full[:4]])
+
+    def test_labelwise_priority_strategy_orders_by_area(self):
+        """The registered strategy ranks by −A_p with the same tie-break —
+        its realized selection order must agree with selection_priority on
+        σ²-valid clients."""
+        import jax
+        rng = np.random.default_rng(4)
+        for _ in range(N_DRAWS):
+            h = random_hists(rng)
+            res = select_labelwise_priority(jax.random.PRNGKey(0), h, 4)
+            valid = np.asarray(label_variance_normed(h) > 0)
+            s = np.asarray(selection_priority(h))
+            sel = np.asarray(res.mask) > 0
+            assert sel.sum() <= 4 and (~sel | valid).all()
+            if sel.any() and (~sel & valid).any():
+                # every selected client outranks every passed-over valid one
+                assert s[sel].min() >= s[valid & ~sel].max() - 1e-6
+
+
+class TestKMeans:
+    def test_deterministic_and_shapes(self):
+        rng = np.random.default_rng(5)
+        h = random_hists(rng, n=10, c=6)
+        a1, c1 = kmeans_cluster(h, 3)
+        a2, c2 = kmeans_cluster(h, 3)
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        assert np.asarray(a1).shape == (10,) and np.asarray(c1).shape == (3, 6)
+        assert np.asarray(a1).min() >= 0 and np.asarray(a1).max() < 3
+
+    def test_single_cluster_is_trivial(self):
+        rng = np.random.default_rng(6)
+        h = random_hists(rng)
+        a, _ = kmeans_cluster(h, 1)
+        np.testing.assert_array_equal(np.asarray(a), 0)
+
+    def test_separated_populations_split(self):
+        """Two disjoint-label populations land in different clusters."""
+        h = np.zeros((8, 6), np.int64)
+        h[:4, :3] = 10   # population A: labels 0-2
+        h[4:, 3:] = 10   # population B: labels 3-5
+        a, _ = kmeans_cluster(h, 2)
+        a = np.asarray(a)
+        assert len(np.unique(a[:4])) == 1 and len(np.unique(a[4:])) == 1
+        assert a[0] != a[4]
+
+    def test_matches_numpy_lloyd_oracle(self):
+        """Brute-force oracle: re-run the exact deterministic Lloyd recipe in
+        float64 numpy — priority-rank seeding, validity-weighted centroid
+        updates (dark clients excluded), empty cluster keeps its centroid,
+        argmin ties to the lower index — and demand agreement on assignment
+        (exact) and centroids (f32 tolerance).  Randomized draws include dark
+        clients, so the empty-exclusion and empty-cluster rules are hit."""
+        rng = np.random.default_rng(7)
+        for _ in range(N_DRAWS):
+            n, c, m = int(rng.integers(3, 14)), int(rng.integers(2, 7)), \
+                int(rng.integers(1, 5))
+            h = random_hists(rng, n=n, c=c, density=float(rng.uniform(.2, .9)))
+            h[rng.random(n) < 0.2] = 0          # some dark clients
+            if (h.sum(-1) == 0).all():
+                h[0, 0] = 1
+            n_iters = 4
+            a, cent = kmeans_cluster(h, m, n_iters=n_iters)
+
+            eps = 1e-9
+            hf = h.astype(np.float32) + eps
+            p = (hf / hf.sum(-1, keepdims=True)).astype(np.float64)
+            valid = (h.sum(-1) > 0).astype(np.float64)
+            order = np.argsort(-np.asarray(selection_priority(h)),
+                               kind="stable")
+            pos = np.round(np.linspace(0, n - 1, m)).astype(int)
+            ocent = p[order[pos]].copy()
+            for _ in range(n_iters):
+                d2 = ((p[:, None, :] - ocent[None, :, :]) ** 2).sum(-1)
+                oa = d2.argmin(-1)               # numpy argmin ties low, too
+                for k in range(m):
+                    w = (oa == k).astype(np.float64) * valid
+                    if w.sum() > 0:
+                        ocent[k] = (w @ p) / w.sum()
+            d2 = ((p[:, None, :] - ocent[None, :, :]) ** 2).sum(-1)
+            oa = d2.argmin(-1)
+            np.testing.assert_array_equal(np.asarray(a), oa)
+            np.testing.assert_allclose(np.asarray(cent), ocent,
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_centroids_stay_on_simplex(self):
+        """Seeds are ε-normalized pdfs and updates are convex combinations,
+        so every centroid row stays a distribution — even with dark clients
+        and empty clusters in the mix."""
+        h = np.zeros((5, 6), np.int64)
+        h[0, :3] = 4
+        h[1, 3:] = 4
+        # clients 2-4 dark
+        a, cent = kmeans_cluster(h, 3)
+        cent = np.asarray(cent)
+        assert np.isfinite(cent).all() and (cent >= 0).all()
+        np.testing.assert_allclose(cent.sum(-1), 1.0, rtol=1e-5)
+        assert np.asarray(a).shape == (5,)
+        assert np.asarray(a).min() >= 0 and np.asarray(a).max() < 3
+
+    def test_more_clusters_than_points_keeps_seed_centroids(self):
+        h = np.array([[5, 0], [0, 5]], np.int64)
+        a, cent = kmeans_cluster(h, 4)
+        a, cent = np.asarray(a), np.asarray(cent)
+        assert a.shape == (2,) and cent.shape == (4, 2)
+        assert np.isfinite(cent).all()
+        assert a[0] != a[1]
+
+    def test_cluster_counts_and_weights(self):
+        a = np.array([0, 1, 1, 2, 1], np.int32)
+        np.testing.assert_array_equal(np.asarray(cluster_counts(a, 3)),
+                                      [1., 3., 1.])
+        w = np.array([1., 0., 1., 1., 1.], np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(cluster_counts(a, 3, weights=w)), [1., 2., 1.])

@@ -15,10 +15,10 @@ import numpy as np
 import pytest
 
 from repro.configs.paper_cnn import FLConfig
-from repro.core import (CASES, STRATEGIES, SelectionResult, apply_availability,
-                        availability_plan, case_label_plan, quantity_skew,
-                        register_strategy, registered_strategies, strategy_id,
-                        topn_mask)
+from repro.core import (CASES, STRATEGIES, Aggregator, SelectionResult,
+                        apply_availability, availability_plan, case_label_plan,
+                        quantity_skew, register_aggregator, register_strategy,
+                        registered_strategies, strategy_id, topn_mask)
 from repro.fl import (ExperimentResult, ExperimentSpec, ScenarioSpec,
                       TransformSpec, availability, engines, quantity,
                       register_engine, registered_transforms, run, run_fl_host,
@@ -237,6 +237,68 @@ class TestRunSurface:
         np.testing.assert_array_equal(back.accuracy, res.accuracy)
 
 
+class TestClusteredAggregation:
+    """Per-cluster global models (aggregation='clustered_fedavg') through the
+    experiment surface: host≡sim parity for the mixture trajectory AND the
+    per-cluster detail, plus exact JSON round-trip of the clustered meta."""
+
+    def _base(self):
+        scen = (ScenarioSpec.from_case("iid", samples_per_client=8),
+                ScenarioSpec.from_case("case1b", samples_per_client=8))
+        return dict(scenarios=scen, strategies=("random",), seeds=(0,),
+                    fl=MICRO, aggregation="clustered_fedavg",
+                    eval_n_per_class=2)
+
+    def test_clustered_host_sim_parity(self):
+        base = self._base()
+        sim = run(ExperimentSpec(engine="sim", **base))
+        host = run(ExperimentSpec(engine="host", **base))
+        np.testing.assert_allclose(host.accuracy, sim.accuracy,
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(host.loss, sim.loss, rtol=1e-5, atol=1e-6)
+        cs, ch = sim.cluster_trajectories(), host.cluster_trajectories()
+        assert cs is not None and ch is not None
+        assert cs["n_clusters"] == 2
+        # (scenario, strategy, seed, round, cluster) / (..., client)
+        assert cs["accuracy"].shape == (2, 1, 1, MICRO.global_epochs, 2)
+        assert cs["assign"].shape == (2, 1, 1, MICRO.global_epochs,
+                                      MICRO.num_clients)
+        assert cs["assign"].min() >= 0 and cs["assign"].max() < 2
+        # the round k-means is PRNG-free, so assignments match exactly
+        np.testing.assert_array_equal(ch["assign"], cs["assign"])
+        np.testing.assert_allclose(ch["accuracy"], cs["accuracy"],
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(ch["loss"], cs["loss"],
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_clustered_single_model_pin_unmoved(self):
+        """Registering/running clustered aggregation must not perturb the
+        single-global-model path: n_clusters==1 resolves to the exact
+        pre-registry round, so sim≡host parity stays at its old tolerance
+        and no clustered meta appears."""
+        base = dict(self._base(), aggregation="fedavg")
+        sim = run(ExperimentSpec(engine="sim", **base))
+        host = run(ExperimentSpec(engine="host", **base))
+        np.testing.assert_allclose(host.accuracy, sim.accuracy,
+                                   rtol=1e-5, atol=1e-6)
+        assert sim.cluster_trajectories() is None
+        assert host.cluster_trajectories() is None
+        assert "clustered" not in sim.meta
+
+    def test_clustered_result_json_roundtrip(self):
+        base = self._base()
+        res = run(ExperimentSpec(engine="sim", **base))
+        back = ExperimentResult.from_json(res.to_json())
+        # exact: meta is plain JSON (lists), so round-trip is identity
+        assert back.meta == res.meta
+        np.testing.assert_array_equal(back.accuracy, res.accuracy)
+        ct, cb = res.cluster_trajectories(), back.cluster_trajectories()
+        np.testing.assert_array_equal(cb["assign"], ct["assign"])
+        np.testing.assert_array_equal(cb["accuracy"], ct["accuracy"])
+        np.testing.assert_array_equal(cb["loss"], ct["loss"])
+        assert cb["assign"].dtype == np.int32
+
+
 @pytest.mark.slow
 class TestSpecGridParity:
     def test_table1_grid_spec_identical_to_run_grid(self):
@@ -347,9 +409,65 @@ class TestShardedEngine:
         assert "SHARDED_OK" in proc.stdout
 
     def test_sharded_engine_guards(self):
+        # Unknown aggregation names die at spec.validate() (registry lookup),
+        # before any engine is reached.
         spec = ExperimentSpec(
             scenarios=(ScenarioSpec.from_case("iid"),),
             strategies=("random",), engine="sharded", fl=MICRO,
             aggregation="median")
-        with pytest.raises(ValueError, match="fedavg/fedsgd"):
+        with pytest.raises(KeyError, match="unknown aggregator"):
             run(spec)
+        # A registered aggregator with a custom reduce override is a valid
+        # spec, but the sharded engine's delta-psum collective cannot honor
+        # it — engine-level ValueError.
+        register_aggregator(
+            "_test_sharded_custom_reduce",
+            Aggregator(base="fedavg",
+                       reduce=lambda stacked, live, sizes: stacked),
+            overwrite=True)
+        spec = ExperimentSpec(
+            scenarios=(ScenarioSpec.from_case("iid"),),
+            strategies=("random",), engine="sharded", fl=MICRO,
+            aggregation="_test_sharded_custom_reduce")
+        with pytest.raises(ValueError, match="delta-psum"):
+            run(spec)
+
+    def test_sharded_clustered_matches_sim(self):
+        """8 emulated devices, 16 clients, clustered_fedavg (n_clusters=2):
+        the per-cluster delta-psum aggregation pins trajectory parity (and
+        exact k-means assignment parity) against the compiled engine."""
+        script = textwrap.dedent("""
+            import numpy as np
+            from repro.configs.paper_cnn import FLConfig
+            from repro.fl import ExperimentSpec, ScenarioSpec, run
+            cfg = FLConfig(num_clients=16, clients_per_round=4,
+                           global_epochs=2, local_epochs=1, batch_size=8,
+                           lr=1e-3)
+            scen = (ScenarioSpec.from_case("case1b", samples_per_client=8),)
+            base = dict(scenarios=scen, strategies=("labelwise",), seeds=(0,),
+                        fl=cfg, aggregation="clustered_fedavg",
+                        eval_n_per_class=2)
+            sh = run(ExperimentSpec(engine="sharded", **base))
+            sim = run(ExperimentSpec(engine="sim", **base))
+            np.testing.assert_array_equal(sh.num_selected, sim.num_selected)
+            np.testing.assert_allclose(sh.accuracy, sim.accuracy, atol=5e-3)
+            np.testing.assert_allclose(sh.loss, sim.loss, rtol=2e-4,
+                                       atol=2e-5)
+            cs, csh = sim.cluster_trajectories(), sh.cluster_trajectories()
+            assert csh is not None and csh["n_clusters"] == 2
+            np.testing.assert_array_equal(csh["assign"], cs["assign"])
+            np.testing.assert_allclose(csh["accuracy"], cs["accuracy"],
+                                       atol=5e-3)
+            np.testing.assert_allclose(csh["loss"], cs["loss"], rtol=2e-4,
+                                       atol=2e-5)
+            assert sh.meta["sharded"]["n_clusters"] == 2
+            print("SHARDED_CLUSTERED_OK")
+        """)
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8",
+                   PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+        proc = subprocess.run([sys.executable, "-c", script], env=env,
+                              capture_output=True, text=True, timeout=540,
+                              cwd=os.path.dirname(os.path.dirname(__file__)))
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        assert "SHARDED_CLUSTERED_OK" in proc.stdout
