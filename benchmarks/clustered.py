@@ -9,7 +9,9 @@ side by side on the non-IID cases, where a single model averaged across
 disjoint label populations is exactly the failure mode §IV's clustering
 targets.  The scalar clustered trajectory is the valid-population-weighted
 mixture over cluster models (identical across engines), so the two columns
-are directly comparable.
+are directly comparable.  The ``n_clusters`` axis sweeps 1 (plain fedavg) →
+2 → 4 → 8 per-cluster models through the registered ``clustered_fedavg``/
+``clustered_fedavg4``/``clustered_fedavg8`` families.
 
 Output: ``BENCH_clustered.json`` at the repo root + the usual CSV lines.
 """
@@ -23,13 +25,16 @@ import numpy as np
 
 from repro.configs.paper_cnn import FLConfig
 from repro.fl import ExperimentSpec, ScenarioSpec, run
-from .common import emit
+from .common import emit, write_report
 
 # case1b/case2b: majority-biased and dual-label non-IID splits — the two
 # headline cases where label populations fragment; iid rides along as the
 # control where clustering should neither help much nor hurt.
 CASES_BENCH = ("case1b", "case2b", "iid")
-AGGREGATIONS = ("fedavg", "clustered_fedavg")
+# n_clusters axis: 1 (the single-model baseline) → 2 → 4 → 8 per-cluster
+# global models, via the registered clustered_fedavg{,4,8} families.
+AGGREGATIONS = ("fedavg", "clustered_fedavg", "clustered_fedavg4",
+                "clustered_fedavg8")
 STRATEGY = "labelwise"
 N_SEEDS = 2
 SPC = 8
@@ -80,11 +85,14 @@ def main(fast: bool = True) -> dict:
         if ct is not None:
             entry["n_clusters"] = ct["n_clusters"]
             # how decisively the round k-means splits the population:
-            # mean fraction of clients in the larger cluster, per case
+            # mean fraction of clients in the LARGEST cluster, per case
+            # (max over the per-cluster membership fractions — exact for
+            # any n_clusters, not just the 2-cluster special case)
             assign = ct["assign"]                        # (K, S, R, T, N)
-            frac = (assign == 0).mean(axis=-1)
+            frac = np.stack([(assign == j).mean(axis=-1)
+                             for j in range(ct["n_clusters"])]).max(axis=0)
             entry["majority_cluster_fraction_by_case"] = {
-                c: float(np.maximum(frac, 1 - frac)[k].mean())
+                c: float(frac[k].mean())
                 for k, c in enumerate(CASES_BENCH)}
         report["aggregations"][agg] = entry
         emit(f"clustered/{agg}", total / (len(CASES_BENCH) * n_seeds * rounds)
@@ -92,16 +100,18 @@ def main(fast: bool = True) -> dict:
              f"compile={res.compile_s:.1f}s")
 
     for k, c in enumerate(CASES_BENCH):
-        single = float(results["fedavg"].final_accuracy[k].mean())
-        clust = float(results["clustered_fedavg"].final_accuracy[k].mean())
-        report["cases"][c] = {"fedavg": single, "clustered_fedavg": clust,
-                              "delta": clust - single}
+        row = {agg: float(results[agg].final_accuracy[k].mean())
+               for agg in AGGREGATIONS}
+        row["delta"] = row["clustered_fedavg"] - row["fedavg"]
+        report["cases"][c] = row
         emit(f"clustered/case_{c}", 0.0,
-             f"fedavg={single:.4f} clustered={clust:.4f} "
-             f"delta={clust - single:+.4f}")
+             f"fedavg={row['fedavg']:.4f} "
+             f"clustered={row['clustered_fedavg']:.4f} "
+             f"k4={row['clustered_fedavg4']:.4f} "
+             f"k8={row['clustered_fedavg8']:.4f} "
+             f"delta={row['delta']:+.4f}")
 
-    with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=2)
+    write_report(OUT_PATH, report)
     emit("clustered/report", 0.0, f"-> {OUT_PATH}")
     return report
 

@@ -71,3 +71,29 @@ def timeit_us(fn: Callable, n: int = 10, warmup: int = 2) -> float:
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """Contract output: ``name,us_per_call,derived`` CSV line."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_report(out_path: str, report: dict, *,
+                 compile_s: float | None = None) -> str:
+    """The one ``BENCH_*.json`` writer (all suites route through it).
+
+    Injects the uniform top-level environment keys every report carries —
+    ``compile_s`` (pass it explicitly, or leave the report's own value),
+    ``backend`` and ``device_count`` — so cached vs cold runs and
+    cross-backend numbers are comparable at a glance, then writes ``report``
+    to ``out_path`` (indent=2).  Returns ``out_path``."""
+    import json
+
+    import jax
+
+    report = dict(report)
+    if compile_s is not None:
+        report["compile_s"] = float(compile_s)
+    elif "compile_s" not in report:
+        raise ValueError("BENCH report needs a top-level compile_s — pass "
+                         "compile_s= or put it in the report")
+    report["backend"] = jax.default_backend()
+    report["device_count"] = int(jax.device_count())
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return out_path

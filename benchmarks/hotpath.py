@@ -195,7 +195,7 @@ def _bench_agg(fast: bool) -> dict:
 
 
 def main(fast: bool = True) -> dict:
-    from .common import emit, maybe_enable_compile_cache
+    from .common import emit, maybe_enable_compile_cache, write_report
 
     cache = maybe_enable_compile_cache()
     t0 = time.perf_counter()
@@ -211,8 +211,7 @@ def main(fast: bool = True) -> dict:
         + agg["single_matrix_compile_s"],
         "wall_s": time.perf_counter() - t0,
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=2)
+    write_report(OUT_PATH, report)
 
     for r in hist_rows:
         emit(f"hotpath/hist_{r['shape']}_reference", r["reference_us"],

@@ -32,6 +32,7 @@ SUITES = [
     ("workload_grid", "benchmarks.workload_grid"),
     ("clustered", "benchmarks.clustered"),
     ("sharded_round", "benchmarks.sharded_round"),
+    ("population", "benchmarks.population"),
     ("roofline_report", "benchmarks.roofline_report"),
 ]
 
@@ -60,6 +61,11 @@ def main(argv=None) -> int:
                          "models) vs single-model fedavg accuracy "
                          "comparison on the non-IID cases and emit "
                          "BENCH_clustered.json")
+    ap.add_argument("--population", action="store_true",
+                    help="only run the population-scale suite (hier≡sim "
+                         "micro parity, N-sweep 10³→10⁶ with per-shard "
+                         "compiled-memory measurements, async FedBuff demo) "
+                         "and emit BENCH_population.json")
     args = ap.parse_args(argv)
     if args.sim_grid:
         args.only = "sim_grid"
@@ -71,6 +77,8 @@ def main(argv=None) -> int:
         args.only = "hotpath"
     if args.clustered:
         args.only = "clustered"
+    if args.population:
+        args.only = "population"
     if args.only and args.only not in {n for n, _ in SUITES}:
         ap.error(f"unknown suite {args.only!r}; have "
                  f"{sorted(n for n, _ in SUITES)}")

@@ -139,7 +139,7 @@ def _child(devices: int, rounds: int) -> dict:
 
 
 def main(fast: bool = True) -> dict:
-    from .common import emit
+    from .common import emit, write_report
 
     rounds = TIMED_ROUNDS if fast else 4 * TIMED_ROUNDS
     results = []
@@ -172,8 +172,7 @@ def main(fast: bool = True) -> dict:
                          for r in results for name, _, _ in VARIANTS),
         "by_device_count": results,
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=2)
+    write_report(OUT_PATH, report)
 
     for r in results:
         ga, gall = r["gather_a2a"], r["gather_allgather"]

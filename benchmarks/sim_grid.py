@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs.paper_cnn import FLConfig
 from repro.core import CASES, case_label_plan
 from repro.fl import ExperimentSpec, ScenarioSpec, run, run_fl_host
-from .common import emit
+from .common import emit, write_report
 
 STRATEGIES_3 = ("random", "labelwise", "kl")
 N_SEEDS = 5
@@ -119,8 +119,7 @@ def main(fast: bool = True, host_sample: int = 4) -> dict:
             c: float(res.final_accuracy[i].mean())
             for i, c in enumerate(CASES)},
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=2)
+    write_report(OUT_PATH, report)
 
     emit("sim_grid/compiled", sim_total / n_trials * 1e6,
          f"trials={n_trials} total={sim_total:.1f}s compile={res.compile_s:.1f}s")

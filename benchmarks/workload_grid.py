@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.configs.paper_cnn import FLConfig
 from repro.fl import ExperimentSpec, ScenarioSpec, run, run_fl_host
-from .common import emit
+from .common import emit, write_report
 
 WORKLOADS = ("cnn", "lm")
 STRATEGIES_2 = ("random", "labelwise")
@@ -100,8 +100,7 @@ def main(fast: bool = True) -> dict:
              f"projected_total={host_projected:.1f}s "
              f"speedup={host_projected / sim_total:.2f}x")
 
-    with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=2)
+    write_report(OUT_PATH, report)
     emit("workload_grid/report", 0.0, f"-> {OUT_PATH}")
     return report
 

@@ -2,7 +2,8 @@
 composable JAX modules.  See DESIGN.md §1/§3."""
 from .label_stats import (histogram, label_variance, label_variance_normed,
                           coverage, empirical_pdf, rank_remap_values,
-                          expected_coverage_per_round)
+                          expected_coverage_per_round,
+                          partial_label_statistics, merge_label_statistics)
 from .kl import kl_divergence, kl_to_uniform, uniformity_score
 from .clustering import (cluster_membership, cluster_sizes, area_index,
                          area_counts, num_areas_upper_bound,
@@ -10,7 +11,7 @@ from .clustering import (cluster_membership, cluster_sizes, area_index,
                          kmeans_cluster, cluster_counts)
 from .selection import (SelectionResult, STRATEGIES, BUILTIN_STRATEGIES,
                         get_strategy, register_strategy, registered_strategies,
-                        selection_budget, strategy_id, topn_mask,
+                        selection_budget, strategy_id, topn_mask, topk_by_score,
                         select_random, select_labelwise, select_labelwise_unnorm,
                         select_coverage, select_kl, select_entropy, select_full,
                         select_labelwise_priority)
@@ -21,7 +22,8 @@ from .noniid import (CASES, case_label_plan, bias_mix_plan, dirichlet_plan,
 from .aggregation import (masked_mean, fedavg_aggregate, fedsgd_aggregate,
                           interpolate, psum_aggregate, all_gather_scores,
                           gather_client_shards, exchange_selected_shards,
-                          psum_weighted_mean,
+                          psum_weighted_mean, block_partial_sums,
+                          two_tier_weighted_mean,
                           Aggregator, AGGREGATORS, BUILTIN_AGGREGATORS,
                           register_aggregator, registered_aggregators,
                           aggregator_id, get_aggregator)

@@ -202,6 +202,54 @@ for _name, _agg in zip(BUILTIN_AGGREGATORS,
     register_aggregator(_name, _agg)
 del _name, _agg
 
+# Cluster-count sweep (ids 4/5, appended AFTER the frozen 0..3 block):
+# the same clustered-FedAvg family at wider k-means widths, registered
+# through the public API exactly as the docstring above prescribes —
+# benchmarks/clustered.py sweeps the n_clusters axis over these.
+register_aggregator("clustered_fedavg4", Aggregator("fedavg", n_clusters=4))
+register_aggregator("clustered_fedavg8", Aggregator("fedavg", n_clusters=8))
+
+
+# ---------------------------------------------------------------------------
+# Two-tier (hierarchical) reduction — the population-scale aggregation rule.
+# ---------------------------------------------------------------------------
+
+def block_partial_sums(stacked: PyTree, weights: Array, block_ids: Array,
+                       num_blocks: int) -> Tuple[PyTree, Array]:
+    """Edge-aggregator partials: per-block Σ_{i∈b} w_i·x_i and Σ_{i∈b} w_i.
+
+    ``stacked`` leaves carry a leading slot axis of length S; ``block_ids``
+    (S,) int assigns each slot to one of ``num_blocks`` edges.  Returns the
+    (num_blocks, ...) partial-sum tree and the (num_blocks,) weight sums —
+    everything an edge ships to the server, O(num_blocks·|θ|) regardless of
+    the client population behind each edge."""
+    member = (block_ids[None, :] == jnp.arange(num_blocks)[:, None])
+    w_eb = member.astype(jnp.float32) * weights.astype(jnp.float32)[None, :]
+    num = jax.tree_util.tree_map(
+        lambda x: jnp.tensordot(w_eb, x.astype(jnp.float32), axes=1), stacked)
+    return num, w_eb.sum(axis=-1)
+
+
+def two_tier_weighted_mean(stacked: PyTree, mask: Array,
+                           weights: Array | None, block_ids: Array,
+                           num_blocks: int) -> PyTree:
+    """Hierarchical FedAvg reduction: block-local weighted partial sums →
+    global combine, ``Σ_e (Σ_{i∈e} w x) / Σ_e (Σ_{i∈e} w)``.
+
+    Algebraically equal to the flat :func:`masked_mean` — the two-level sum
+    is a reassociation of the same Σ w·x, so the hierarchical engine's round
+    matches the flat engines to float tolerance (the ≤1e-5 hier≡sim pin in
+    tests/test_population.py).  Keeps ``masked_mean``'s ε-denominator
+    count=0 degradation."""
+    w = mask.astype(jnp.float32)
+    if weights is not None:
+        w = w * weights.astype(jnp.float32)
+    num, den = block_partial_sums(stacked, w, block_ids, num_blocks)
+    denom = jnp.maximum(den.sum(), 1e-12)
+    return jax.tree_util.tree_map(
+        lambda partial, ref: (partial.sum(axis=0) / denom).astype(ref.dtype),
+        num, stacked)
+
 
 # ---------------------------------------------------------------------------
 # SPMD (shard_map) forms — client axis is a mesh axis, typically "pod".

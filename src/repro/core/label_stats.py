@@ -98,3 +98,38 @@ def expected_coverage_per_round(hists: Array) -> Array:
     trainability tracks the per-round union coverage, not per-client)."""
     any_present = (hists > 0).any(axis=-2)
     return any_present.sum(axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Block-reducible (partial) statistics — the population-scale contract.
+#
+# A statistic is BLOCK-REDUCIBLE when the value over N clients equals a
+# merge of values over any disjoint block partition.  The hierarchical
+# engine (repro.fl.population) streams client blocks through a lax.scan and
+# only ever carries these partials, so per-shard memory stays flat in N:
+# the dense (N, C) histogram matrix is never materialized.  Histogram sums
+# are sums of exact integer-valued f32 counts, so the merge is BIT-IDENTICAL
+# to the dense computation (pinned by tests/test_population.py).
+# ---------------------------------------------------------------------------
+
+def partial_label_statistics(hists: Array) -> dict:
+    """One block's reducible label statistics from its (B, C) histograms.
+
+    Returns ``{"hist_sum": (C,) f32, "n_valid": f32 scalar,
+    "present": (C,) bool}`` — the per-class count partial sum, the number of
+    clients with a non-empty histogram, and the per-class presence union
+    (``present.sum()`` is §III-B's union coverage n(∪ℒ), the q term of the
+    area index — itself block-reducible via OR)."""
+    hists = hists.astype(jnp.float32)
+    return {"hist_sum": hists.sum(axis=-2),
+            "n_valid": (hists.sum(axis=-1) > 0).sum().astype(jnp.float32),
+            "present": (hists > 0).any(axis=-2)}
+
+
+def merge_label_statistics(a: dict, b: dict) -> dict:
+    """Merge two :func:`partial_label_statistics` dicts (associative +
+    commutative: sum / sum / union), so any block partition reduces to the
+    same global statistics as one dense pass."""
+    return {"hist_sum": a["hist_sum"] + b["hist_sum"],
+            "n_valid": a["n_valid"] + b["n_valid"],
+            "present": a["present"] | b["present"]}

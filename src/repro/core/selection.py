@@ -110,12 +110,48 @@ def topn_mask(scores: Array, valid: Array, n_select: int):
     ``n_select`` doubles as the strategy's budget: pass it (clamped to N) as
     ``SelectionResult.budget`` so the engines gather exactly that many
     training slots — a strategy may ask for any static width, including one
-    wider than the experiment's ``clients_per_round``."""
+    wider than the experiment's ``clients_per_round``.
+
+    Tie-breaking contract (PINNED — tests/test_population.py regression):
+    ``order`` sorts by (descending masked score, ascending client index).
+    Invalid entries are masked to ``NEG_INF`` first, so they sink below every
+    valid entry and tie among themselves — resolved, like every tie, toward
+    the LOWER client index (the sort is explicitly stable over an
+    index-ordered input).  :func:`topk_by_score` reproduces exactly this
+    order from block-partial candidate sets — a lexicographic
+    (−masked score, client id) sort — which is what lets the hierarchical
+    engine's top-k-of-N merge (repro.fl.population) select bit-identically
+    to this dense form."""
     masked = jnp.where(valid, scores, NEG_INF)
-    order = jnp.argsort(-masked)  # stable; invalid sink to the end
+    # stable=True is load-bearing: equal scores (and the NEG_INF invalid
+    # block) must resolve by ascending original index to match topk_by_score.
+    order = jnp.argsort(-masked, stable=True)
     ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
     chosen = (ranks < n_select) & valid
     return chosen.astype(jnp.float32), order.astype(jnp.int32)
+
+
+def topk_by_score(scores: Array, ids: Array, valid: Array, k: int):
+    """Top-``k`` candidates under the canonical :func:`topn_mask` order.
+
+    Input: a candidate set of (scores, global client ids, validity) triples —
+    typically the concatenation of a running top-k carry with one block's
+    freshly scored clients.  Output: the ``k`` best triples, sorted by
+    (descending masked score, ascending client id), with invalid entries
+    masked to ``NEG_INF`` so they sink below every valid one.  Because the
+    sort key is the fully-resolving lexicographic pair (−masked score, id),
+    repeatedly merging per-block candidates through this function yields
+    EXACTLY ``order[:k]`` / ``mask[order[:k]]`` of a dense :func:`topn_mask`
+    over all N clients — the top-k-of-N reduction the hierarchical engine's
+    block scan is built on (associativity of top-k + total order = no drift).
+
+    Returns ``(scores, ids, valid)`` with scores already NEG_INF-masked;
+    pad carries with (NEG_INF, num_clients, False) sentinels — the id
+    ``num_clients`` sorts after every real invalid client."""
+    masked = jnp.where(valid, scores, NEG_INF).astype(jnp.float32)
+    neg, ids_s, valid_s = jax.lax.sort(
+        (-masked, ids.astype(jnp.int32), valid.astype(jnp.int32)), num_keys=2)
+    return -neg[:k], ids_s[:k], valid_s[:k].astype(bool)
 
 
 def _clamped(n_select: int, hists: Array) -> int:

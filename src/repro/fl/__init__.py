@@ -12,6 +12,10 @@ from .experiment import (ExperimentResult, ExperimentSpec, LoweredScenario,
                          ScenarioSpec, TransformSpec, availability, engines,
                          quantity, register_engine, register_transform,
                          registered_transforms, run)
+from .population import (default_num_blocks, derive_arrival_schedule,
+                         make_async_trial_fn, make_hier_trial_fn,
+                         make_population_round, staleness_weight,
+                         streamed_selection, synthetic_population_plan)
 from repro.core import (Aggregator, register_aggregator,
                         registered_aggregators, register_strategy,
                         registered_strategies)
@@ -32,6 +36,10 @@ __all__ = ["local_train", "local_gradient", "make_fl_round", "run_fl",
            "quantity", "register_engine", "register_transform",
            "registered_transforms", "run",
            "register_strategy", "registered_strategies",
+           "default_num_blocks", "derive_arrival_schedule",
+           "make_async_trial_fn", "make_hier_trial_fn",
+           "make_population_round", "staleness_weight", "streamed_selection",
+           "synthetic_population_plan",
            # legacy alias served by __getattr__ below; listing it here keeps
            # `from repro.fl import *` providing it (star-import reads __all__)
            "ENGINE_STRATEGIES"]

@@ -44,7 +44,12 @@ Five orthogonal registries make every axis pluggable without engine edits:
   grid, one XLA program), "host" (the legacy per-round loop, the parity
   oracle), "sharded" (the gather-based SPMD pod-scale round: clients in
   equal blocks per mesh slice, any registered strategy, training FLOPs
-  scale with the selection budget).
+  scale with the selection budget), "hier" (hierarchical two-tier rounds:
+  block-streamed selection + edge/global reduction — repro.fl.population;
+  matches "sim" to ≤1e-5), and "async" (the FedBuff buffered-asynchronous
+  engine: overlapping rounds, staleness-weighted block updates).  Engine
+  knobs (``num_blocks``, ``buffer_k``, ``alpha``, ``tau_max``) ride in
+  ``ExperimentSpec.engine_options``.
 
 ``run_fl`` and ``run_grid`` are now thin shims over this surface.
 """
@@ -383,6 +388,10 @@ class ExperimentSpec:
     rounds: Optional[int] = None
     eval_n_per_class: int = 50
     workload: str = "cnn"
+    # Engine-specific knobs (JSON-able): the population engines read
+    # num_blocks (hier/async) and buffer_k / alpha / tau_max (async);
+    # unknown keys are ignored by engines that don't consume them.
+    engine_options: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def num_rounds(self) -> int:
@@ -417,6 +426,7 @@ class ExperimentSpec:
             "aggregation": self.aggregation, "rounds": self.rounds,
             "eval_n_per_class": self.eval_n_per_class,
             "workload": self.workload,
+            "engine_options": dict(self.engine_options),
         }
 
     @classmethod
@@ -429,7 +439,8 @@ class ExperimentSpec:
             fl=FLConfig(**d["fl"]) if "fl" in d else FLConfig(),
             aggregation=d.get("aggregation"), rounds=d.get("rounds"),
             eval_n_per_class=d.get("eval_n_per_class", 50),
-            workload=d.get("workload", "cnn"))
+            workload=d.get("workload", "cnn"),
+            engine_options=dict(d.get("engine_options", {})))
 
 
 @dataclasses.dataclass
@@ -861,9 +872,24 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     return acc, loss, nsel, time.perf_counter() - t0, 0.0, meta
 
 
+def _engine_hier(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
+    """Hierarchical two-tier population engine — repro.fl.population."""
+    from .population import run_engine_hier
+    return run_engine_hier(spec, lowered, ds)
+
+
+def _engine_async(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
+                  ds):
+    """Async FedBuff population engine — repro.fl.population."""
+    from .population import run_engine_async
+    return run_engine_async(spec, lowered, ds)
+
+
 register_engine("sim", _engine_sim)
 register_engine("host", _engine_host)
 register_engine("sharded", _engine_sharded)
+register_engine("hier", _engine_hier)
+register_engine("async", _engine_async)
 
 
 # ---------------------------------------------------------------------------

@@ -56,7 +56,7 @@ Built-ins:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +92,18 @@ class Workload:
     make_eval: Callable[[Any], EvalFn]
     batch_keys: Tuple[str, ...]
     num_classes: Callable[[Any], int]
+    # Optional chunked materializer for population-scale engines:
+    # ``materialize_rows(ds, plan_rows, key, row_ids)`` builds the round
+    # batch for an arbitrary SUBSET of clients — ``plan_rows`` is (B, n_max)
+    # and ``row_ids`` the (B,) GLOBAL client ids — with the contract that
+    # client i's draw depends only on (key, i), never on which other rows
+    # share the call.  That id-keyed stability is what makes any block
+    # partition (and a selected-clients-only gather) yield identical
+    # per-client data, so the chunked path never materializes the dense
+    # (N, n, ...) round.  ``None`` → the generic per-row fold_in fallback
+    # (:func:`materialize_rows` below) wraps ``materialize``.
+    materialize_rows: Optional[
+        Callable[[Any, Any, Array, Array], Dict[str, Array]]] = None
 
     def dataset(self, ds: Any = None) -> Any:
         """``ds`` if given, else this workload's default dataset."""
@@ -103,6 +115,35 @@ class Workload:
         engine builds its replicated PartitionSpec tree from this)."""
         return jax.eval_shape(lambda k: self.init(k, ds),
                               jax.random.PRNGKey(0))
+
+
+def materialize_rows(wl: "Workload", ds: Any, plan_rows: Array, key: Array,
+                     row_ids: Array) -> Dict[str, Array]:
+    """Chunked row materialization: round batch for a client SUBSET.
+
+    Dispatches to ``wl.materialize_rows`` when the workload declares one;
+    otherwise wraps ``wl.materialize`` per row under ``vmap`` with a
+    per-client key ``fold_in(key, row_ids[i])``.  Either way client i's data
+    is a pure function of (key, i) — the id-keyed stability contract the
+    population engine's chunked path relies on (tested by
+    tests/test_population.py::test_materialize_rows_block_invariant).
+
+    NOTE the fallback's draws intentionally differ from a dense
+    ``wl.materialize(ds, full_plan, key)`` call: JAX PRNG array draws are
+    shape-dependent, so a (N, n, ...) single-key draw cannot be reproduced
+    chunk-wise.  Engines that pin parity against ``sim`` (the hier registry
+    engine) therefore materialize with the dense call; the chunked path is
+    the population-scale surface where N never fits densely."""
+    plan_rows = jnp.asarray(plan_rows, jnp.int32)
+    row_ids = jnp.asarray(row_ids, jnp.int32)
+    if wl.materialize_rows is not None:
+        return wl.materialize_rows(ds, plan_rows, key, row_ids)
+
+    def one(row: Array, rid: Array) -> Dict[str, Array]:
+        out = wl.materialize(ds, row[None], jax.random.fold_in(key, rid))
+        return jax.tree_util.tree_map(lambda x: x[0], out)
+
+    return jax.vmap(one)(plan_rows, row_ids)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,371 @@
+"""Population-scale engine tests: block-streamed selection ≡ dense
+selection, block-reducible statistics bit-parity, the hier≡sim and
+async≡sim trajectory pins, and the engines' rejection guards.
+
+The fast tier covers the pure-math contracts (tie-break pinning, partial
+sums, streamed-vs-dense selection, schedules, serialization) plus the
+acceptance micro smoke: engine="hier" ≡ engine="sim" at N=32, E=4.  The
+slow tier adds the async FedBuff degenerate pin (τ=0, K=E, strategy="full"
+≡ flat FedAvg) and a staleness-behavior smoke.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import FLConfig
+from repro.core import (Aggregator, case_label_plan, merge_label_statistics,
+                        partial_label_statistics, register_aggregator,
+                        selection_budget, topk_by_score, topn_mask,
+                        two_tier_weighted_mean, STRATEGIES)
+from repro.core.selection import NEG_INF
+from repro.fl import (ExperimentSpec, ScenarioSpec, availability,
+                      default_num_blocks, derive_arrival_schedule,
+                      make_population_round, run, staleness_weight,
+                      streamed_selection, synthetic_population_plan)
+from repro.fl.population import NON_BLOCK_SEPARABLE
+from repro.fl.workloads import get_workload, materialize_rows
+from repro.kernels.dispatch import client_histograms
+
+MICRO32 = FLConfig(num_clients=32, clients_per_round=8, global_epochs=2,
+                   local_epochs=1, batch_size=8, lr=1e-3)
+
+# Row-wise (block-separable) deterministic builtins: blockwise scores are
+# bit-identical to dense rows.  `random` is separable in distribution but
+# draws a different stream per block; `labelwise_priority` is rejected.
+SEPARABLE_DETERMINISTIC = ("labelwise", "labelwise_unnorm", "coverage",
+                           "kl", "entropy", "full")
+
+
+def _plan_t(case="case1b", seed=0, n=32, spc=8):
+    return case_label_plan(case, seed=seed, num_rounds=1, num_clients=n,
+                           samples_per_client=spc,
+                           majority=int(spc * 200 / 290))[0]
+
+
+def _dense_hists(plan_t, avail, num_classes=10):
+    labels = jnp.asarray(plan_t, jnp.int32)
+    valid = labels >= 0
+    hists = client_histograms(jnp.where(valid, labels, 0), num_classes, valid)
+    return hists * jnp.asarray(avail, jnp.float32)[:, None]
+
+
+class TestTopkMerge:
+    def test_tie_break_matches_dense_topn_mask(self):
+        """Crafted ties + invalid entries: the block-merge order must equal
+        dense topn_mask's documented (descending score, ascending index)
+        order exactly, with invalid entries sunk."""
+        scores = jnp.asarray([1.0, 3.0, 3.0, 0.5, 3.0, 2.0, 3.0, 0.5],
+                             jnp.float32)
+        valid = jnp.asarray([1, 1, 0, 1, 1, 1, 1, 0], bool)
+        n_sel = 4
+        mask, order = topn_mask(scores, valid, n_sel)
+        ids = jnp.arange(8, dtype=jnp.int32)
+        # Merge two 4-element blocks through the carry, sentinel-padded.
+        top = (jnp.full((n_sel,), NEG_INF, jnp.float32),
+               jnp.full((n_sel,), 8, jnp.int32), jnp.zeros((n_sel,), bool))
+        for blk in (slice(0, 4), slice(4, 8)):
+            masked = jnp.where(valid[blk], scores[blk], NEG_INF)
+            top = topk_by_score(
+                jnp.concatenate([top[0], masked]),
+                jnp.concatenate([top[1], ids[blk]]),
+                jnp.concatenate([top[2], valid[blk]]), n_sel)
+        np.testing.assert_array_equal(np.asarray(top[1]),
+                                      np.asarray(order[:n_sel]))
+        # ties at 3.0 resolve toward the lower client index: 1, 4, 6
+        np.testing.assert_array_equal(np.asarray(top[1]), [1, 4, 6, 5])
+        np.testing.assert_array_equal(np.asarray(top[2]),
+                                      np.asarray(mask[order[:n_sel]] > 0))
+
+    def test_sentinels_sort_after_real_clients(self):
+        s, i, v = topk_by_score(
+            jnp.asarray([NEG_INF, 2.0], jnp.float32),
+            jnp.asarray([6, 3], jnp.int32),
+            jnp.asarray([False, True]), 2)
+        np.testing.assert_array_equal(np.asarray(i), [3, 6])
+        assert bool(v[0]) and not bool(v[1])
+
+
+class TestBlockStatistics:
+    @pytest.mark.parametrize("strategy", SEPARABLE_DETERMINISTIC)
+    def test_partial_sums_and_scores_match_dense(self, strategy):
+        """Per-block histogram partial sums ≡ dense client_histograms
+        bit-for-bit, and block-wise strategy scores ≡ dense rows — including
+        dark clients under an availability mask."""
+        n, bs, c = 32, 8, 10
+        plan_t = _plan_t()
+        rng = np.random.default_rng(7)
+        avail = (rng.random(n) > 0.3).astype(np.float32)
+        avail[0:bs] = 0.0                       # one fully dark block
+        dense = _dense_hists(plan_t, avail, c)
+        stats = None
+        for b in range(n // bs):
+            blk = dense[b * bs:(b + 1) * bs]
+            p = partial_label_statistics(blk)
+            stats = p if stats is None else merge_label_statistics(stats, p)
+            r = STRATEGIES[strategy](jax.random.PRNGKey(0), blk, bs)
+            np.testing.assert_array_equal(
+                np.asarray(r.scores),
+                np.asarray(STRATEGIES[strategy](
+                    jax.random.PRNGKey(0), dense, n).scores[b * bs:(b + 1) * bs]))
+        np.testing.assert_array_equal(np.asarray(stats["hist_sum"]),
+                                      np.asarray(dense.sum(0)))
+        assert float(stats["n_valid"]) == float((dense.sum(-1) > 0).sum())
+        np.testing.assert_array_equal(np.asarray(stats["present"]),
+                                      np.asarray((dense > 0).any(0)))
+
+    @pytest.mark.parametrize("strategy", SEPARABLE_DETERMINISTIC)
+    def test_streamed_selection_matches_dense(self, strategy):
+        """streamed_selection's merged (ids, live) ≡ the dense engine path
+        (topn_mask order + engine empty-histogram gate) exactly."""
+        n, bs, c, n_sel = 32, 8, 10, 6
+        plan_t = jnp.asarray(_plan_t(seed=3), jnp.int32)
+        rng = np.random.default_rng(11)
+        avail = jnp.asarray((rng.random(n) > 0.25).astype(np.float32))
+        dense = _dense_hists(plan_t, avail, c)
+        r = STRATEGIES[strategy](jax.random.PRNGKey(5), dense, n_sel)
+        budget = selection_budget(r, n_sel, n)
+        mask = r.mask * (dense.sum(-1) > 0)
+        idx = r.order[:budget]
+        ids, live, scores, stats = streamed_selection(
+            lambda b, _ids: jax.lax.dynamic_slice_in_dim(plan_t, b * bs, bs, 0),
+            lambda b: jax.lax.dynamic_slice_in_dim(avail, b * bs, bs, 0),
+            num_blocks=n // bs, block_size=bs, num_classes=c,
+            strategy=strategy, key=jax.random.PRNGKey(5), budget=budget)
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(idx))
+        np.testing.assert_array_equal(np.asarray(live),
+                                      np.asarray(mask[idx] > 0))
+        np.testing.assert_array_equal(np.asarray(stats["hist_sum"]),
+                                      np.asarray(dense.sum(0)))
+
+    def test_block_partition_invariance(self):
+        """The merged selection is independent of the block partition — the
+        defining property of block-reducible statistics."""
+        n, c, n_sel = 32, 10, 5
+        plan_t = jnp.asarray(_plan_t(seed=9), jnp.int32)
+        ones = jnp.ones((n,), jnp.float32)
+        outs = []
+        for bs in (4, 8, 16, 32):
+            ids, live, scores, _ = streamed_selection(
+                lambda b, _ids, bs=bs: jax.lax.dynamic_slice_in_dim(
+                    plan_t, b * bs, bs, 0),
+                lambda b, bs=bs: jax.lax.dynamic_slice_in_dim(
+                    ones, b * bs, bs, 0),
+                num_blocks=n // bs, block_size=bs, num_classes=c,
+                strategy="labelwise", key=jax.random.PRNGKey(0), budget=n_sel)
+            outs.append((np.asarray(ids), np.asarray(live),
+                         np.asarray(scores)))
+        for o in outs[1:]:
+            np.testing.assert_array_equal(o[0], outs[0][0])
+            np.testing.assert_array_equal(o[1], outs[0][1])
+            np.testing.assert_array_equal(o[2], outs[0][2])
+
+
+class TestTwoTierReduction:
+    def test_two_tier_equals_flat_weighted_mean(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+        w = jnp.asarray(rng.random(8), jnp.float32)
+        mask = jnp.asarray([1, 1, 0, 1, 1, 0, 1, 1], jnp.float32)
+        block_ids = jnp.asarray(np.arange(8) // 4, jnp.int32)
+        got = two_tier_weighted_mean({"p": x}, mask, w, block_ids, 2)["p"]
+        mw = mask * w
+        want = (mw[:, None] * x).sum(0) / mw.sum()
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+
+
+class TestHierEngine:
+    def _spec(self, engine, **kw):
+        base = dict(
+            scenarios=(ScenarioSpec.from_case("case1b", samples_per_client=8),),
+            strategies=("labelwise",), seeds=(0,), fl=MICRO32,
+            eval_n_per_class=2, engine=engine)
+        base.update(kw)
+        return ExperimentSpec(**base)
+
+    def test_hier_matches_sim_micro(self):
+        """Acceptance pin: engine='hier' (N=32, E=4 blocks) reproduces
+        engine='sim' trajectories to ≤1e-5."""
+        r_sim = run(self._spec("sim"))
+        r_hier = run(self._spec("hier", engine_options={"num_blocks": 4}))
+        np.testing.assert_allclose(r_hier.accuracy, r_sim.accuracy,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(r_hier.loss, r_sim.loss,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(r_hier.num_selected,
+                                      r_sim.num_selected)
+        pop = r_hier.meta["population"]
+        assert pop["mode"] == "hier" and pop["num_blocks"] == 4
+        assert pop["block_size"] == 8
+
+    def test_hier_rejections(self):
+        with pytest.raises(ValueError, match="not block-separable"):
+            run(self._spec("hier", strategies=("labelwise_priority",)))
+        with pytest.raises(ValueError, match="clustered"):
+            run(self._spec("hier", aggregation="clustered_fedavg"))
+        register_aggregator(
+            "_test_pop_custom_reduce",
+            Aggregator(base="fedavg",
+                       reduce=lambda stacked, live, sizes: stacked),
+            overwrite=True)
+        with pytest.raises(ValueError, match="custom Aggregator.reduce"):
+            run(self._spec("hier", aggregation="_test_pop_custom_reduce"))
+        with pytest.raises(ValueError, match="divisor"):
+            run(self._spec("hier", engine_options={"num_blocks": 5}))
+
+    def test_default_num_blocks(self):
+        assert default_num_blocks(32) == 4
+        assert default_num_blocks(100) == 10
+        assert default_num_blocks(7) == 1
+        assert default_num_blocks(1 << 20) == 1 << 10
+
+
+class TestAsyncEngine:
+    def _spec(self, engine, **kw):
+        base = dict(
+            scenarios=(ScenarioSpec.from_case("case1b", samples_per_client=8),),
+            strategies=("full",), seeds=(0,), fl=MICRO32,
+            eval_n_per_class=2, engine=engine)
+        base.update(kw)
+        return ExperimentSpec(**base)
+
+    def test_staleness_weight(self):
+        tau = jnp.asarray([0, 1, 2, 4], jnp.float32)
+        w = np.asarray(staleness_weight(tau, 0.5))
+        assert w[0] == 1.0
+        assert (np.diff(w) < 0).all()
+        np.testing.assert_allclose(
+            np.asarray(staleness_weight(tau, 0.0)), 1.0)
+        np.testing.assert_allclose(w[1], 1.0 / np.sqrt(2.0), rtol=1e-6)
+
+    def test_derive_arrival_schedule(self):
+        plan = np.zeros((2, 32, 8), np.int32)
+        blocks, delays = derive_arrival_schedule(
+            plan, None, rounds=4, num_blocks=4, block_size=8, buffer_k=4,
+            tau_max=2)
+        assert blocks.shape == (4, 4) and (delays == 0).all()
+        # round-robin covers every block each window when K = E
+        assert all(sorted(row) == [0, 1, 2, 3] for row in blocks)
+        # dark clients (all −1 rows) push their block's delay toward tau_max
+        plan_dark = plan.copy()
+        plan_dark[:, 0:8, :] = -1                 # block 0 fully dark
+        _, d2 = derive_arrival_schedule(
+            plan_dark, None, rounds=4, num_blocks=4, block_size=8,
+            buffer_k=4, tau_max=2)
+        assert (d2[blocks == 0] == 2).all() and (d2[blocks != 0] == 0).all()
+        # mask-mode availability is consumed directly
+        avail = np.ones((4, 32), np.float32)
+        avail[:, 8:16] = 0.0
+        _, d3 = derive_arrival_schedule(
+            plan, avail, rounds=4, num_blocks=4, block_size=8, buffer_k=4,
+            tau_max=3)
+        assert (d3[blocks == 1] == 3).all()
+        assert d3.min() >= 0 and d3.max() <= 3
+
+    @pytest.mark.slow
+    def test_async_degenerate_matches_sim_full(self):
+        """τ=0 (full availability) + buffer_k=num_blocks + strategy='full':
+        every version hears every block fresh — flat FedAvg, ≡ sim ≤1e-5."""
+        r_sim = run(self._spec("sim"))
+        r_async = run(self._spec(
+            "async", engine_options={"num_blocks": 4, "buffer_k": 4,
+                                     "tau_max": 0}))
+        np.testing.assert_allclose(r_async.accuracy, r_sim.accuracy,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(r_async.loss, r_sim.loss,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(r_async.num_selected,
+                                      r_sim.num_selected)
+        pop = r_async.meta["population"]
+        assert pop["mode"] == "async" and pop["delay_max"] == 0
+
+    @pytest.mark.slow
+    def test_async_staleness_smoke(self):
+        """Under availability-derived staleness the engine still produces
+        finite trajectories and reports the delay statistics."""
+        spec = self._spec(
+            "async",
+            scenarios=(ScenarioSpec.from_case(
+                "case1b", samples_per_client=8,
+                transforms=(availability(0.4, mode="mask", seed=1),)),),
+            engine_options={"num_blocks": 4, "tau_max": 2, "alpha": 0.5})
+        r = run(spec)
+        assert np.isfinite(r.accuracy).all() and np.isfinite(r.loss).all()
+        assert r.meta["population"]["delay_max"] <= 2
+        assert r.meta["population"]["delay_mean"] > 0
+
+    def test_async_rejections(self):
+        with pytest.raises(ValueError, match="not block-separable"):
+            run(self._spec("async", strategies=("labelwise_priority",)))
+        with pytest.raises(ValueError, match="clustered"):
+            run(self._spec("async", aggregation="clustered_fedavg"))
+
+
+class TestPopulationScaleSurface:
+    def test_materialize_rows_partition_invariance(self):
+        """The chunked id-keyed materializer must give client i the same
+        draw regardless of which chunk it rides in."""
+        wl = get_workload("cnn")
+        ds = wl.dataset(None)
+        plan = jnp.asarray(_plan_t(n=6, spc=8)[:6], jnp.int32)
+        key = jax.random.PRNGKey(42)
+        ids = jnp.arange(6, dtype=jnp.int32)
+        full = materialize_rows(wl, ds, plan, key, ids)
+        parts = [materialize_rows(wl, ds, plan[s], key, ids[s])
+                 for s in (slice(0, 2), slice(2, 6))]
+        for k in full:
+            np.testing.assert_array_equal(
+                np.asarray(full[k]),
+                np.concatenate([np.asarray(p[k]) for p in parts]))
+
+    def test_population_round_runs_and_is_partition_stable(self):
+        """One procedural-plan round at N=16: selection identical across
+        block sizes, live set non-empty, params move."""
+        plan_fn = synthetic_population_plan(num_classes=10,
+                                            samples_per_client=8)
+        wl = get_workload("cnn")
+        ds = wl.dataset(None)
+        params = wl.init(jax.random.PRNGKey(0), ds)
+        key_t = jax.random.PRNGKey(100)
+        sel = {}
+        for bs in (4, 8):
+            rnd = make_population_round(
+                plan_fn=plan_fn, num_clients=16, block_size=bs,
+                strategy="labelwise", budget=3, workload="cnn", ds=ds)
+            new_params, info = jax.jit(rnd)(params, key_t)
+            sel[bs] = np.asarray(info["selected"])
+            assert float(info["num_selected"]) > 0
+            assert np.isfinite(np.asarray(info["hist_sum"])).all()
+            moved = jax.tree_util.tree_map(
+                lambda a, b: float(np.abs(np.asarray(a - b)).max()),
+                new_params, params)
+            assert max(jax.tree_util.tree_leaves(moved)) > 0
+        np.testing.assert_array_equal(sel[4], sel[8])
+
+    def test_population_round_rejects_non_separable(self):
+        with pytest.raises(ValueError, match="not block-separable"):
+            make_population_round(
+                plan_fn=synthetic_population_plan(), num_clients=16,
+                block_size=4, strategy="labelwise_priority", budget=3)
+        with pytest.raises(ValueError, match="divide"):
+            make_population_round(
+                plan_fn=synthetic_population_plan(), num_clients=16,
+                block_size=5, strategy="labelwise", budget=3)
+
+
+class TestSpecSerialization:
+    def test_engine_options_roundtrip(self):
+        spec = ExperimentSpec(
+            scenarios=(ScenarioSpec.from_case("iid"),),
+            strategies=("labelwise",), engine="hier",
+            engine_options={"num_blocks": 4, "tau_max": 2})
+        back = ExperimentSpec.from_dict(spec.to_dict())
+        assert back.engine_options == {"num_blocks": 4, "tau_max": 2}
+        assert back.engine == "hier"
+        # default stays an empty dict and serializes
+        assert ExperimentSpec.from_dict(
+            ExperimentSpec(scenarios=(ScenarioSpec.from_case("iid"),))
+            .to_dict()).engine_options == {}
