@@ -17,9 +17,7 @@ Output: ``BENCH_clustered.json`` at the repo root + the usual CSV lines.
 """
 from __future__ import annotations
 
-import json
 import os
-import time
 
 import numpy as np
 

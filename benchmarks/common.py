@@ -9,12 +9,10 @@ paper's sizes.
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 import time
-from typing import Callable, List
+from typing import Callable
 
-import numpy as np
 
 from repro.configs.paper_cnn import FLConfig
 

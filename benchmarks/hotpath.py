@@ -25,7 +25,6 @@ Output: ``BENCH_hotpath.json`` at the repo root + the usual CSV lines.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 

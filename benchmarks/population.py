@@ -96,7 +96,6 @@ def _sweep(report: dict, fast: bool) -> float:
     """Compile the chunked round across the N sweep; record per-N compiled
     memory (must be flat) and wall-clock where executed."""
     import jax
-    import jax.numpy as jnp
 
     from repro.fl.workloads import get_workload
 

@@ -18,7 +18,6 @@ Output: ``BENCH_sim_grid.json`` at the repo root + the usual CSV lines.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 

@@ -13,11 +13,9 @@ Output: ``BENCH_workloads.json`` at the repo root + the usual CSV lines.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
-import numpy as np
 
 from repro.configs.paper_cnn import FLConfig
 from repro.fl import ExperimentSpec, ScenarioSpec, run, run_fl_host

@@ -1,0 +1,36 @@
+"""Static analysis for the five registry axes — see ``python -m repro.analysis``.
+
+Two layers over one :class:`Diagnostic` vocabulary:
+
+* **Jaxpr contract passes** (:mod:`repro.analysis.contracts`) — abstract
+  interpretation over every registered strategy / workload / aggregator:
+  SelectionResult and ``materialize`` schemas, static budgets, traceability,
+  forbidden primitives, and the block-separability classification
+  (:mod:`repro.analysis.separability`) that ``repro.fl.population``'s block
+  engines gate on.
+* **Repo AST lint** (:mod:`repro.analysis.ast_checks`) — engine
+  payload-agnosticism, import-time-only registration, slow markers on
+  compile-heavy tests, no numpy in traced bodies.
+
+Entry points: ``python -m repro.analysis`` (CI), ``ExperimentSpec.validate(
+deep=True)`` (pre-compile, exactly the spec's resolved entries), and the
+``check=True`` keyword on ``register_strategy`` / ``register_workload`` /
+``register_aggregator`` (registration-time opt-in).
+"""
+from .contracts import (assert_aggregator_contract, assert_strategy_contract,
+                        assert_workload_contract, check_aggregator,
+                        check_registries, check_spec, check_strategy,
+                        check_workload)
+from .diagnostics import ContractError, Diagnostic, Findings
+from .separability import SeparabilityVerdict, classify_strategy
+from .ast_checks import run_repo_checks
+
+__all__ = [
+    "ContractError", "Diagnostic", "Findings",
+    "SeparabilityVerdict", "classify_strategy",
+    "check_strategy", "check_workload", "check_aggregator",
+    "check_spec", "check_registries",
+    "assert_strategy_contract", "assert_workload_contract",
+    "assert_aggregator_contract",
+    "run_repo_checks",
+]

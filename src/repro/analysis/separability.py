@@ -1,0 +1,428 @@
+"""Block-separability of selection strategies, proven from the jaxpr.
+
+The hier/async/population engines stream clients through blocks and call the
+registered strategy once per block (repro.fl.population).  That is only
+correct when client i's SCORE is a row-wise function of its own histogram
+row — a strategy whose score reads other rows (``labelwise_priority``'s
+population-wide label-union count) silently mis-ranks across blocks.  The
+engines used to gate this on a hardcoded name denylist; this module replaces
+the denylist with a verified property:
+
+* **Jaxpr dependence pass** — trace ``fn(key, hists, N)`` abstractly and
+  propagate a three-point lattice over every intermediate variable:
+
+      CONST        — no dependence on ``hists`` at all
+      ROW(axis)    — element ``i`` along ``axis`` depends only on hists
+                     row ``i`` (plus CONST data)
+      GLOBAL       — mixes histogram rows
+
+  Elementwise ops preserve the tag; reductions over the row axis (the
+  ``reduce_or`` behind ``area_index``'s label union, a row-axis ``cumsum``,
+  a row-axis ``sort`` …) promote to GLOBAL; reductions over non-row axes
+  keep ROW with the axis renumbered; ``pjit``/``custom_jvp_call`` recurse
+  into their sub-jaxprs; opaque primitives degrade conservatively (CONST
+  inputs stay CONST, anything else goes GLOBAL, with the primitive recorded
+  as evidence).  The verdict reads the tag of the ``scores`` output only —
+  the mask/order path legitimately runs a global argsort.
+
+* **Saturated-mask probe** — the mask cannot be proven row-wise statically
+  (it routes through that global argsort), but the streamed engines only
+  ever call strategies with ``n_select = block_size``, where the returned
+  mask degenerates to the strategy's validity gate.  The probe checks the
+  degenerate identity concretely on a small deterministic histogram matrix:
+  ``fn(key, H, N).mask`` must equal the concatenation of the per-block
+  masks.  This holds for every separable builtin including ``random``
+  (whose scores differ per block but whose saturated mask is the key-free
+  validity gate), and fails for genuinely global validity gates.
+
+The combined verdict (scores ROW/CONST *and* probe-consistent) is what
+``repro.fl.population`` now enforces for every strategy that is not
+explicitly denylisted or allowlisted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# Dependence lattice values: ("const", -1) ⊑ ("row", axis) ⊑ ("global", -1).
+Dep = Tuple[str, int]
+CONST: Dep = ("const", -1)
+GLOBAL: Dep = ("global", -1)
+
+
+def _row(axis: int) -> Dep:
+    return ("row", int(axis))
+
+
+# Elementwise primitives: output element depends only on the same-position
+# input elements, so the row tag passes straight through.
+_ELEMENTWISE = frozenset({
+    "abs", "add", "and", "atan2", "cbrt", "ceil", "clamp", "convert_element_type",
+    "copy", "cos", "cosh", "digamma", "div", "eq", "erf", "erf_inv", "erfc",
+    "exp", "expm1", "floor", "ge", "gt", "integer_pow", "is_finite", "le",
+    "lgamma", "log", "log1p", "logistic", "lt", "max", "min", "mul", "ne",
+    "neg", "nextafter", "not", "or", "pow", "real_pow", "rem", "round",
+    "rsqrt", "select_n", "shift_left", "shift_right_arithmetic",
+    "shift_right_logical", "sign", "sin", "sinh", "sqrt", "square",
+    "stop_gradient", "sub", "tan", "tanh", "xor",
+    # PRNG plumbing: output position i depends on input position i (and the
+    # key); const w.r.t. hists stays const.
+    "bitcast_convert_type", "random_bits", "random_wrap", "random_unwrap",
+    "random_fold_in", "threefry2x32",
+})
+
+# Reductions over `axes`: row axis reduced → GLOBAL, else renumber.
+_REDUCE = frozenset({"reduce_sum", "reduce_prod", "reduce_max", "reduce_min",
+                     "reduce_and", "reduce_or", "reduce_xor",
+                     "argmax", "argmin"})
+
+# Scans along `axis`: mixing along the row axis → GLOBAL, else preserved.
+_CUMULATIVE = frozenset({"cumsum", "cumprod", "cummax", "cummin",
+                         "cumlogsumexp"})
+
+
+@dataclasses.dataclass(frozen=True)
+class SeparabilityVerdict:
+    """The analyzer's answer for one strategy.
+
+    ``separable`` is the combined verdict; ``scores_dep`` the lattice tag of
+    the scores output (``"const"``/``"row"``/``"global"``/``"unknown"``);
+    ``mask_consistent`` the saturated-mask probe result (``None`` when the
+    probe was skipped or the trace already failed); ``reasons`` the recorded
+    evidence — the jaxpr primitives that promoted the scores slice to
+    GLOBAL, or the trace error."""
+    name: str
+    separable: bool
+    scores_dep: str
+    mask_consistent: Optional[bool] = None
+    reasons: Tuple[str, ...] = ()
+
+    def summary(self) -> str:
+        why = f" ({'; '.join(self.reasons)})" if self.reasons else ""
+        return (f"{self.name}: scores={self.scores_dep}, "
+                f"mask_probe={self.mask_consistent}{why}")
+
+
+def _aligned_row_axis(dep: Dep, op_shape: Tuple[int, ...],
+                      out_shape: Tuple[int, ...]) -> Dep:
+    """Map an operand's row axis into the output axis space under numpy
+    trailing-dim broadcast alignment (jaxprs mostly pre-broadcast operands
+    to equal shapes, so this is usually the identity)."""
+    if dep[0] != "row":
+        return dep
+    shift = len(out_shape) - len(op_shape)
+    if shift < 0:
+        return GLOBAL
+    return _row(dep[1] + shift)
+
+
+def _join_elementwise(deps_shapes: Sequence[Tuple[Dep, Tuple[int, ...]]],
+                      out_shape: Tuple[int, ...]) -> Dep:
+    axes = set()
+    for dep, shape in deps_shapes:
+        dep = _aligned_row_axis(dep, shape, out_shape)
+        if dep[0] == "global":
+            return GLOBAL
+        if dep[0] == "row":
+            axes.add(dep[1])
+    if not axes:
+        return CONST
+    if len(axes) > 1:
+        return GLOBAL          # two different row alignments mixed
+    return _row(axes.pop())
+
+
+class _DepInterpreter:
+    """Forward dependence propagation over one (possibly nested) jaxpr."""
+
+    def __init__(self):
+        self.evidence: List[str] = []
+
+    def run(self, jaxpr, in_deps: Sequence[Dep],
+            const_deps: Sequence[Dep]) -> List[Dep]:
+        env: Dict[Any, Dep] = {}
+
+        def read(atom) -> Dep:
+            if hasattr(atom, "val"):          # Literal
+                return CONST
+            return env.get(atom, CONST)
+
+        def shape_of(atom) -> Tuple[int, ...]:
+            return tuple(getattr(atom.aval, "shape", ()))
+
+        for var, dep in zip(jaxpr.constvars, const_deps):
+            env[var] = dep
+        for var, dep in zip(jaxpr.invars, in_deps):
+            env[var] = dep
+
+        for eqn in jaxpr.eqns:
+            in_deps_shapes = [(read(v), shape_of(v)) for v in eqn.invars]
+            out_deps = self._eqn(eqn, in_deps_shapes)
+            for var, dep in zip(eqn.outvars, out_deps):
+                env[var] = dep
+        return [read(v) for v in jaxpr.outvars]
+
+    # -- per-equation transfer ----------------------------------------------
+    def _eqn(self, eqn, in_ds: List[Tuple[Dep, Tuple[int, ...]]]) -> List[Dep]:
+        prim = eqn.primitive.name
+        out_shapes = [tuple(getattr(v.aval, "shape", ()))
+                      for v in eqn.outvars]
+
+        def all_out(dep: Dep) -> List[Dep]:
+            return [dep] * len(eqn.outvars)
+
+        if prim in ("iota", "random_seed"):
+            return all_out(CONST)
+
+        if prim in _ELEMENTWISE:
+            return all_out(_join_elementwise(in_ds, out_shapes[0]))
+
+        if prim in _REDUCE:
+            axes = eqn.params.get("axes", ())
+            dep, _ = in_ds[0]
+            if dep[0] != "row":
+                return all_out(dep)
+            if dep[1] in axes:
+                self.evidence.append(
+                    f"{prim} reduces over the client axis (axes={axes})")
+                return all_out(GLOBAL)
+            new_axis = dep[1] - sum(1 for a in axes if a < dep[1])
+            return all_out(_row(new_axis))
+
+        if prim in _CUMULATIVE:
+            axis = eqn.params.get("axis", 0)
+            dep, _ = in_ds[0]
+            if dep[0] == "row" and dep[1] == axis:
+                self.evidence.append(f"{prim} scans along the client axis")
+                return all_out(GLOBAL)
+            return all_out(dep)
+
+        if prim == "broadcast_in_dim":
+            bdims = eqn.params["broadcast_dimensions"]
+            dep, _ = in_ds[0]
+            if dep[0] == "row":
+                return all_out(_row(bdims[dep[1]]))
+            return all_out(dep)
+
+        if prim == "transpose":
+            perm = list(eqn.params["permutation"])
+            dep, _ = in_ds[0]
+            if dep[0] == "row":
+                return all_out(_row(perm.index(dep[1])))
+            return all_out(dep)
+
+        if prim == "squeeze":
+            dims = eqn.params["dimensions"]
+            dep, _ = in_ds[0]
+            if dep[0] == "row":
+                if dep[1] in dims:
+                    return all_out(GLOBAL)
+                return all_out(_row(dep[1] - sum(1 for d in dims
+                                                 if d < dep[1])))
+            return all_out(dep)
+
+        if prim == "expand_dims":
+            dims = eqn.params["dimensions"]
+            dep, _ = in_ds[0]
+            if dep[0] == "row":
+                new_axis = dep[1] + sum(1 for d in dims if d <= dep[1])
+                return all_out(_row(new_axis))
+            return all_out(dep)
+
+        if prim == "reshape":
+            dep, in_shape = in_ds[0]
+            if dep[0] != "row":
+                return all_out(dep)
+            new_axis = _map_axis_through_reshape(in_shape, out_shapes[0],
+                                                 dep[1])
+            if new_axis is None:
+                self.evidence.append(
+                    f"reshape {in_shape}->{out_shapes[0]} folds the client "
+                    "axis")
+                return all_out(GLOBAL)
+            return all_out(_row(new_axis))
+
+        if prim == "concatenate":
+            dim = eqn.params["dimension"]
+            joined = _join_elementwise(in_ds, out_shapes[0])
+            if joined[0] == "row" and joined[1] == dim:
+                self.evidence.append(
+                    "concatenate along the client axis breaks row alignment")
+                return all_out(GLOBAL)
+            return all_out(joined)
+
+        if prim == "pad":
+            return all_out(in_ds[0][0])
+
+        if prim == "sort":
+            dim = eqn.params["dimension"]
+            key_dep = _join_elementwise(in_ds, out_shapes[0])
+            if key_dep[0] == "row" and key_dep[1] == dim:
+                self.evidence.append("sort along the client axis")
+                return all_out(GLOBAL)
+            return all_out(key_dep)
+
+        if prim in ("slice", "dynamic_slice", "rev"):
+            dep, _ = in_ds[0]
+            if dep[0] == "row":
+                # Any row-axis reindexing breaks "element i ↔ row i".
+                self.evidence.append(f"{prim} reindexes the client axis")
+                return all_out(GLOBAL)
+            if any(d[0][0] != "const" for d in in_ds[1:]):
+                return all_out(GLOBAL)
+            return all_out(dep)
+
+        # Sub-jaxpr primitives (pjit, custom_jvp/vjp_call): recurse with the
+        # caller's dependence tags.  When the call carries leading const
+        # operands that don't map onto sub-jaxpr invars, recursion is only
+        # sound if those consts carry no histogram dependence.
+        sub = _sub_jaxpr(eqn)
+        if sub is not None:
+            closed, skip = sub
+            in_deps = [d for d, _ in in_ds]
+            if all(d[0] == "const" for d in in_deps[:skip]):
+                try:
+                    return self.run(closed.jaxpr, in_deps[skip:],
+                                    [CONST] * len(closed.jaxpr.constvars))
+                except Exception:   # malformed recursion → opaque fallback
+                    pass
+
+        # Opaque fallback: pure functions of CONST inputs stay CONST;
+        # anything touching row/global data degrades to GLOBAL.
+        joined = _join_elementwise(in_ds, out_shapes[0] if out_shapes else ())
+        if joined[0] == "const":
+            return all_out(CONST)
+        self.evidence.append(f"opaque primitive {prim!r}")
+        return all_out(GLOBAL)
+
+
+def _map_axis_through_reshape(old: Tuple[int, ...], new: Tuple[int, ...],
+                              axis: int) -> Optional[int]:
+    """The output axis a reshape maps ``old[axis]`` to, if the factorization
+    keeps that axis intact (same extent, same leading-element stride block);
+    ``None`` when the reshape folds it."""
+    lead = int(np.prod(old[:axis], dtype=np.int64)) if axis else 1
+    acc = 1
+    for j, extent in enumerate(new):
+        if acc == lead and extent == old[axis]:
+            return j
+        acc *= extent
+    return None
+
+
+def _sub_jaxpr(eqn):
+    """(ClosedJaxpr, num_leading_const_invars) for call-like primitives."""
+    from jax.extend import core as jex
+    params = eqn.params
+    for key in ("jaxpr", "call_jaxpr"):
+        cj = params.get(key)
+        if cj is None:
+            continue
+        if isinstance(cj, jex.ClosedJaxpr):
+            n_consts = int(params.get("num_consts", 0))
+            if len(cj.jaxpr.invars) == len(eqn.invars):
+                return cj, 0
+            if len(cj.jaxpr.invars) == len(eqn.invars) - n_consts:
+                return cj, n_consts
+    return None
+
+
+def _probe_hists(num_clients: int, num_classes: int) -> jnp.ndarray:
+    """Deterministic probe content: varied per-row histograms with nonzero
+    label variance on most rows and two all-zero (invalid) rows, so both
+    arms of every builtin validity gate are exercised."""
+    i = np.arange(num_clients)[:, None]
+    c = np.arange(num_classes)[None, :]
+    h = ((3 * i + 7 * c + 1) % 5).astype(np.float32)
+    h[1] = 0.0
+    if num_clients > 5:
+        h[5] = 0.0
+    return jnp.asarray(h)
+
+
+def _mask_probe(fn: Callable, *, num_clients: int, num_classes: int,
+                num_blocks: int) -> Optional[bool]:
+    """Saturated-mask block-consistency: at ``n_select = population`` the
+    dense mask must equal the concatenation of per-block masks."""
+    if num_clients % num_blocks:
+        return None
+    bs = num_clients // num_blocks
+    key = jax.random.PRNGKey(7)
+    hists = _probe_hists(num_clients, num_classes)
+    try:
+        dense = np.asarray(fn(key, hists, num_clients).mask)
+        parts = [np.asarray(fn(jax.random.fold_in(key, b),
+                                hists[b * bs:(b + 1) * bs], bs).mask)
+                 for b in range(num_blocks)]
+    except Exception:
+        return None
+    return bool(np.array_equal(dense, np.concatenate(parts)))
+
+
+def classify_strategy(fn: Callable, *, num_clients: int = 32,
+                      num_classes: int = 10, name: str = "",
+                      probe: bool = True) -> SeparabilityVerdict:
+    """Classify one registered strategy's block-separability.
+
+    ``num_clients``/``num_classes`` set the trace shapes (the dependence
+    structure is shape-stable for every known strategy, so callers gating
+    huge populations classify at this canonical size).  ``probe=False``
+    skips the concrete saturated-mask probe and answers from the jaxpr
+    alone."""
+    name = name or getattr(fn, "__name__", "strategy")
+    budget_cell: List[Any] = []
+
+    def wrapper(key, hists):
+        r = fn(key, hists, num_clients)
+        budget_cell.append(getattr(r, "budget", None))
+        return r.scores, r.mask
+
+    try:
+        closed = jax.make_jaxpr(wrapper)(
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+            jax.ShapeDtypeStruct((num_clients, num_classes), jnp.float32))
+    except TypeError:
+        # Older tracers want concrete args; the arrays are tiny.
+        try:
+            closed = jax.make_jaxpr(wrapper)(
+                jax.random.PRNGKey(0),
+                jnp.zeros((num_clients, num_classes), jnp.float32))
+        except Exception as e:
+            return SeparabilityVerdict(name, False, "unknown", None,
+                                       (f"trace failed: {e}",))
+    except Exception as e:
+        return SeparabilityVerdict(name, False, "unknown", None,
+                                   (f"trace failed: {e}",))
+
+    interp = _DepInterpreter()
+    out_deps = interp.run(closed.jaxpr, [CONST, _row(0)],
+                          [CONST] * len(closed.jaxpr.constvars))
+    scores_dep = out_deps[0]
+    # Evidence from GLOBAL promotions anywhere in the trace; only relevant
+    # when the scores output itself went global.
+    reasons = tuple(dict.fromkeys(interp.evidence[:4]))
+    if scores_dep[0] == "row" and scores_dep[1] != 0:
+        scores_dep = GLOBAL
+        reasons = reasons + ("scores aligned to a non-client axis",)
+    row_ok = scores_dep[0] in ("const", "row")
+    if row_ok:
+        reasons = ()
+
+    mask_ok: Optional[bool] = None
+    if probe:
+        mask_ok = _mask_probe(fn, num_clients=num_clients,
+                              num_classes=num_classes,
+                              num_blocks=min(4, num_clients))
+        if mask_ok is False:
+            reasons = reasons + (
+                "saturated-mask probe: dense mask != per-block masks",)
+
+    separable = row_ok and mask_ok is not False
+    return SeparabilityVerdict(name, separable, scores_dep[0], mask_ok,
+                               reasons)

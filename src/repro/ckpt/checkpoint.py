@@ -5,7 +5,6 @@ bit-casting to uint16 on save (npz has no bfloat16) and restoring on load.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import re

@@ -131,7 +131,8 @@ _AGG_REGISTRY_ORDER: List[str] = []
 
 
 def register_aggregator(name: str, agg: "Aggregator | AggregateFn", *,
-                        overwrite: bool = False) -> Aggregator:
+                        overwrite: bool = False,
+                        check: bool = False) -> Aggregator:
     """Register a server-aggregation family under ``name``.
 
     ``agg`` is an :class:`Aggregator` — or a bare :data:`AggregateFn`
@@ -146,7 +147,12 @@ def register_aggregator(name: str, agg: "Aggregator | AggregateFn", *,
     − 1``); re-registering with ``overwrite=True`` swaps the family but
     keeps the id; ids never remap.  Unknown names raise at
     ``ExperimentSpec.validate()``, pre-compile.  Returns the registered
-    :class:`Aggregator`."""
+    :class:`Aggregator`.
+
+    ``check=True`` runs the jaxpr contract pass (repro.analysis) over a
+    custom ``reduce`` BEFORE registering — tree/shape/dtype preservation,
+    traceability, forbidden primitives — raising
+    ``repro.analysis.ContractError`` with structured diagnostics."""
     if not name or not isinstance(name, str):
         raise ValueError(f"aggregator name must be a non-empty str; got {name!r}")
     if name in AGGREGATORS and not overwrite:
@@ -159,6 +165,9 @@ def register_aggregator(name: str, agg: "Aggregator | AggregateFn", *,
     if not isinstance(agg, Aggregator):
         raise TypeError(f"aggregator {name!r} must be an Aggregator or a "
                         f"callable AggregateFn; got {type(agg)}")
+    if check:
+        from repro.analysis import assert_aggregator_contract
+        assert_aggregator_contract(name, agg)
     AGGREGATORS[name] = agg
     if name not in _AGG_REGISTRY_ORDER:
         _AGG_REGISTRY_ORDER.append(name)

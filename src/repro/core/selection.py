@@ -257,8 +257,8 @@ STRATEGIES: Dict[str, SelectFn] = {}
 _REGISTRY_ORDER: List[str] = []
 
 
-def register_strategy(name: str, fn: SelectFn, *,
-                      overwrite: bool = False) -> SelectFn:
+def register_strategy(name: str, fn: SelectFn, *, overwrite: bool = False,
+                      check: bool = False) -> SelectFn:
     """Register a client-selection strategy under ``name``.
 
     The callable must follow the module contract
@@ -285,6 +285,12 @@ def register_strategy(name: str, fn: SelectFn, *,
     an existing name (``overwrite=True``) swaps the callable but keeps the id.
     Ids never remap, so persisted grid indices stay meaningful.  Returns
     ``fn`` so it can be used as a decorator-style helper.
+
+    ``check=True`` runs the jaxpr contract passes (repro.analysis) over
+    ``fn`` BEFORE registering — schema, static budget, traceability,
+    forbidden primitives — and raises ``repro.analysis.ContractError``
+    (with structured diagnostics) instead of registering a callable that
+    would explode mid-compile inside an engine.
     """
     if not name or not isinstance(name, str):
         raise ValueError(f"strategy name must be a non-empty str; got {name!r}")
@@ -294,6 +300,9 @@ def register_strategy(name: str, fn: SelectFn, *,
             " pass overwrite=True to replace its callable (the id is kept)")
     if not callable(fn):
         raise TypeError(f"strategy {name!r} must be callable; got {type(fn)}")
+    if check:
+        from repro.analysis import assert_strategy_contract
+        assert_strategy_contract(name, fn)
     STRATEGIES[name] = fn
     if name not in _REGISTRY_ORDER:
         _REGISTRY_ORDER.append(name)

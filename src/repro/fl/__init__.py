@@ -3,7 +3,7 @@ from .round import (clustered_update_step, make_fl_round, resolve_aggregator,
                     stack_global_params)
 from .workloads import (Workload, get_workload, lm_workload, register_workload,
                         registered_workloads)
-from .loop import run_fl, run_fl_host, FLHistory, success_rate, cnn_batch_loss
+from .loop import run_fl, run_fl_host, FLHistory, success_rate
 from .sharded import (exchange_bytes_per_device, make_sharded_fl_round,
                       topn_mask_from_scores)
 from .sim import (GridResult, grid_arrays, make_trial_fn, run_grid, simulate,
@@ -24,7 +24,7 @@ __all__ = ["local_train", "local_gradient", "make_fl_round", "run_fl",
            "clustered_update_step", "resolve_aggregator",
            "stack_global_params", "Aggregator", "register_aggregator",
            "registered_aggregators",
-           "run_fl_host", "FLHistory", "success_rate", "cnn_batch_loss",
+           "run_fl_host", "FLHistory", "success_rate",
            "Workload", "get_workload", "lm_workload", "register_workload",
            "registered_workloads",
            "exchange_bytes_per_device", "make_sharded_fl_round",

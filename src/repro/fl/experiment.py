@@ -389,20 +389,37 @@ class ExperimentSpec:
     eval_n_per_class: int = 50
     workload: str = "cnn"
     # Engine-specific knobs (JSON-able): the population engines read
-    # num_blocks (hier/async) and buffer_k / alpha / tau_max (async);
-    # unknown keys are ignored by engines that don't consume them.
+    # num_blocks (hier/async) and buffer_k / alpha / tau_max (async).
+    # Each engine declares its accepted keys at register_engine(); validate()
+    # rejects keys outside that set (engines registered without a declaration
+    # accept anything).
     engine_options: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def num_rounds(self) -> int:
         return self.fl.global_epochs if self.rounds is None else self.rounds
 
-    def validate(self) -> None:
+    def validate(self, deep: bool = False, ds=None) -> None:
+        """Fail-fast spec checks, all pre-compile.
+
+        The default pass is name/shape-level: unknown strategy / engine /
+        aggregator / workload / transform names and undeclared
+        ``engine_options`` keys raise here.  ``deep=True`` additionally runs
+        the jaxpr contract passes (repro.analysis) over exactly this spec's
+        resolved registry entries and raises
+        :class:`repro.analysis.ContractError` with structured diagnostics if
+        any entry would break mid-compile inside an engine."""
         if not self.scenarios:
             raise ValueError("spec needs at least one scenario")
         names = [s.name for s in self.scenarios]
         if len(set(names)) != len(names):
             raise ValueError(f"scenario names must be unique; got {names}")
+        for sc in self.scenarios:
+            for t in sc.transforms:
+                if t.kind not in _TRANSFORMS:
+                    raise KeyError(
+                        f"scenario {sc.name!r}: unknown transform kind "
+                        f"{t.kind!r}; have {registered_transforms()}")
         if not self.strategies:
             raise ValueError("spec needs at least one strategy")
         for s in self.strategies:
@@ -412,11 +429,24 @@ class ExperimentSpec:
         if self.engine not in _ENGINES:
             raise KeyError(f"unknown engine {self.engine!r}; have "
                            f"{engines()}")
+        accepted = _ENGINE_OPTION_KEYS.get(self.engine)
+        if accepted is not None:
+            unknown = sorted(set(self.engine_options) - set(accepted))
+            if unknown:
+                raise ValueError(
+                    f"engine {self.engine!r} does not accept engine_options "
+                    f"key(s) {unknown}; it declares "
+                    f"{sorted(accepted) or '(no options)'}")
         # Unknown aggregation families raise here, pre-compile — the same
         # fail-fast contract as strategies/engines/workloads.
         get_aggregator(self.aggregation or self.fl.aggregation)
         from .workloads import get_workload
         get_workload(self.workload)  # unknown workloads raise pre-compile
+        if deep:
+            from repro.analysis import ContractError, check_spec
+            findings = check_spec(self, ds=ds)
+            if findings.errors():
+                raise ContractError(findings)
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -592,10 +622,20 @@ EngineFn = Callable[..., Tuple[np.ndarray, np.ndarray, np.ndarray, float, float]
 
 _ENGINES: Dict[str, EngineFn] = {}
 
+# Engine name -> the engine_options keys it consumes, or None for
+# "accepts anything" (extension engines registered without a declaration
+# keep the old ignore-unknown-keys behaviour).  validate() rejects keys
+# outside the declared set pre-compile.
+_ENGINE_OPTION_KEYS: Dict[str, Optional[Tuple[str, ...]]] = {}
 
-def register_engine(name: str, fn: EngineFn, *,
-                    overwrite: bool = False) -> EngineFn:
-    """Register an execution engine under ``name`` (see module docstring)."""
+
+def register_engine(name: str, fn: EngineFn, *, overwrite: bool = False,
+                    option_keys: Optional[Sequence[str]] = None) -> EngineFn:
+    """Register an execution engine under ``name`` (see module docstring).
+
+    ``option_keys`` declares the ``ExperimentSpec.engine_options`` keys this
+    engine consumes; ``validate()`` rejects any key outside that set.  Leave
+    it ``None`` to accept arbitrary options (no validation)."""
     if not name or not isinstance(name, str):
         raise ValueError(f"engine name must be a non-empty str; got {name!r}")
     if name in _ENGINES and not overwrite:
@@ -603,11 +643,20 @@ def register_engine(name: str, fn: EngineFn, *,
     if not callable(fn):
         raise TypeError(f"engine {name!r} must be callable; got {type(fn)}")
     _ENGINES[name] = fn
+    _ENGINE_OPTION_KEYS[name] = (None if option_keys is None
+                                 else tuple(option_keys))
     return fn
 
 
 def engines() -> Tuple[str, ...]:
     return tuple(_ENGINES)
+
+
+def engine_option_keys(name: str) -> Optional[Tuple[str, ...]]:
+    """The declared engine_options keys for ``name`` (None = accepts any)."""
+    if name not in _ENGINES:
+        raise KeyError(f"unknown engine {name!r}; have {engines()}")
+    return _ENGINE_OPTION_KEYS.get(name)
 
 
 def _clustered_meta(c_acc: np.ndarray, c_loss: np.ndarray,
@@ -885,11 +934,12 @@ def _engine_async(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     return run_engine_async(spec, lowered, ds)
 
 
-register_engine("sim", _engine_sim)
-register_engine("host", _engine_host)
-register_engine("sharded", _engine_sharded)
-register_engine("hier", _engine_hier)
-register_engine("async", _engine_async)
+register_engine("sim", _engine_sim, option_keys=())
+register_engine("host", _engine_host, option_keys=())
+register_engine("sharded", _engine_sharded, option_keys=())
+register_engine("hier", _engine_hier, option_keys=("num_blocks",))
+register_engine("async", _engine_async,
+                option_keys=("num_blocks", "buffer_k", "alpha", "tau_max"))
 
 
 # ---------------------------------------------------------------------------

@@ -26,7 +26,6 @@ import numpy as np
 
 from repro.core import plan_round
 from repro.data import client_batches
-from repro.models import cnn_loss
 from .round import make_fl_round, resolve_aggregator, stack_global_params
 from .workloads import Workload, get_workload
 
@@ -57,17 +56,6 @@ class FLHistory:
     def summary(self) -> Dict[str, float]:
         return {"final_accuracy": self.accuracy[-1], "final_loss": self.loss[-1],
                 "rounds": len(self.accuracy), "wall_s": self.wall_s}
-
-
-def cnn_batch_loss(params: PyTree, batch: Dict[str, Array]):
-    # Back-compat alias for the pre-registry loss plumbing; the loops below
-    # resolve the equivalent callable through the workload registry.
-    return cnn_loss(params, batch["images"], batch["labels"], batch["valid"])
-
-
-def evaluate_cnn(params: PyTree, test_images: Array, test_labels: Array):
-    loss, m = cnn_loss(params, test_images, test_labels)
-    return float(loss), float(m["accuracy"])
 
 
 def run_fl(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,

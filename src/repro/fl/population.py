@@ -90,11 +90,58 @@ from .workloads import Workload, get_workload, materialize_rows
 Array = jax.Array
 PyTree = Any
 
-# Strategies whose scores are NOT a row-wise function of the client's own
-# histogram (labelwise_priority's area index offsets every score by the
-# population-wide label-union count q, which differs per block) — the block
-# engines reject these up front rather than silently mis-rank across blocks.
+# Override denylist: names here are rejected by the block engines without
+# consulting the analyzer.  Since the gate below became a VERIFIED property
+# (repro.analysis.separability classifies the strategy's jaxpr), this set is
+# only an escape hatch for names the maintainers want refused regardless of
+# what the classifier concludes (labelwise_priority's area index offsets
+# every score by the population-wide label-union count q, which differs per
+# block — the classifier agrees, but the pin here keeps the error message
+# stable and the rejection analyzer-independent).
 NON_BLOCK_SEPARABLE = frozenset({"labelwise_priority"})
+
+# Opt-out allowlist: extension-strategy names whose authors vouch for block
+# separability, skipping the jaxpr classification — for row-wise strategies
+# whose jaxpr defeats the static pass (e.g. opaque custom_call primitives).
+ASSUME_BLOCK_SEPARABLE: set = set()
+
+# (name, id(fn), num_classes) -> SeparabilityVerdict.  id(fn) keys the cache
+# to the registered callable, so overwrite-registrations re-classify.
+_SEPARABILITY_CACHE: Dict[Tuple[str, int, int], Any] = {}
+
+
+def _block_separability(strategy: str, num_classes: int):
+    fn = STRATEGIES[strategy]
+    key = (strategy, id(fn), int(num_classes))
+    if key not in _SEPARABILITY_CACHE:
+        from repro.analysis.separability import classify_strategy
+        _SEPARABILITY_CACHE[key] = classify_strategy(
+            fn, num_clients=32, num_classes=int(num_classes), name=strategy)
+    return _SEPARABILITY_CACHE[key]
+
+
+def _check_block_separable(strategy: str, engine: str,
+                           num_classes: int) -> None:
+    """Reject ``strategy`` if its scores are not a row-wise function of the
+    client's own histogram row — denylist override first, then the verified
+    jaxpr classification (cached per (name, callable, num_classes))."""
+    if strategy in NON_BLOCK_SEPARABLE:
+        raise ValueError(
+            f"strategy {strategy!r} is not block-separable (its score "
+            "depends on population-wide statistics, not just the client's "
+            f"own histogram) and cannot run on engine={engine!r}; use "
+            "'coverage' (identical ordering, row-wise scores) or run on "
+            "engine='sim'")
+    if strategy in ASSUME_BLOCK_SEPARABLE or strategy not in STRATEGIES:
+        return  # vouched for / unknown name (raises later at get_strategy)
+    verdict = _block_separability(strategy, num_classes)
+    if not verdict.separable:
+        why = "; ".join(verdict.reasons) or verdict.summary()
+        raise ValueError(
+            f"strategy {strategy!r} is not block-separable per the jaxpr "
+            f"classification ({why}) and cannot run on engine={engine!r}; "
+            "run it on engine='sim' or 'host', or add the name to "
+            "repro.fl.population.ASSUME_BLOCK_SEPARABLE to vouch for it")
 
 
 def default_num_blocks(num_clients: int) -> int:
@@ -104,7 +151,8 @@ def default_num_blocks(num_clients: int) -> int:
     return max(d for d in range(1, cap + 1) if num_clients % d == 0)
 
 
-def _check_block_engine(agg, strategies: Sequence[str], engine: str) -> None:
+def _check_block_engine(agg, strategies: Sequence[str], engine: str,
+                        num_classes: int = 10) -> None:
     if agg.clustered:
         raise ValueError(
             f"engine={engine!r} aggregates through the two-tier block "
@@ -116,13 +164,7 @@ def _check_block_engine(agg, strategies: Sequence[str], engine: str) -> None:
             "reduction; a custom Aggregator.reduce override is not "
             "supported — run it on engine='sim' or 'host'")
     for s in strategies:
-        if s in NON_BLOCK_SEPARABLE:
-            raise ValueError(
-                f"strategy {s!r} is not block-separable (its score depends "
-                "on population-wide statistics, not just the client's own "
-                f"histogram) and cannot run on engine={engine!r}; use "
-                "'coverage' (identical ordering, row-wise scores) or run on "
-                "engine='sim'")
+        _check_block_separable(s, engine, num_classes)
 
 
 def _resolve_blocks(num_clients: int, options: Dict[str, Any]) -> Tuple[int, int]:
@@ -233,9 +275,9 @@ def make_hier_trial_fn(fl_cfg, ds=None, *, strategy: str,
     wl = get_workload(workload)
     ds = wl.dataset(ds)
     agg = get_aggregator(aggregation or fl_cfg.aggregation)
-    _check_block_engine(agg, (strategy,), "hier")
     n_clients = fl_cfg.num_clients
     n_classes = wl.num_classes(ds)
+    _check_block_engine(agg, (strategy,), "hier", num_classes=n_classes)
     e_blocks, block_size = _resolve_blocks(
         n_clients, {} if num_blocks is None else {"num_blocks": num_blocks})
     budget = _static_budget(strategy, n_clients, n_classes,
@@ -372,9 +414,9 @@ def make_async_trial_fn(fl_cfg, ds=None, *, strategy: str,
     wl = get_workload(workload)
     ds = wl.dataset(ds)
     agg = get_aggregator(aggregation or fl_cfg.aggregation)
-    _check_block_engine(agg, (strategy,), "async")
     n_clients = fl_cfg.num_clients
     n_classes = wl.num_classes(ds)
+    _check_block_engine(agg, (strategy,), "async", num_classes=n_classes)
     e_blocks, block_size = _resolve_blocks(
         n_clients, {} if num_blocks is None else {"num_blocks": num_blocks})
     k_buf = e_blocks if buffer_k is None else int(buffer_k)
@@ -540,7 +582,9 @@ def run_engine_hier(spec, lowered, ds):
     """The ``engine="hier"`` registry body — see :func:`make_hier_trial_fn`."""
     opts = dict(getattr(spec, "engine_options", None) or {})
     agg = get_aggregator(spec.aggregation or spec.fl.aggregation)
-    _check_block_engine(agg, spec.strategies, "hier")
+    wl = get_workload(spec.workload)
+    _check_block_engine(agg, spec.strategies, "hier",
+                        num_classes=wl.num_classes(wl.dataset(ds)))
     e_blocks, block_size = _resolve_blocks(spec.fl.num_clients, opts)
     trials: Dict[str, Any] = {}
 
@@ -565,7 +609,9 @@ def run_engine_async(spec, lowered, ds):
     :func:`make_async_trial_fn`."""
     opts = dict(getattr(spec, "engine_options", None) or {})
     agg = get_aggregator(spec.aggregation or spec.fl.aggregation)
-    _check_block_engine(agg, spec.strategies, "async")
+    wl = get_workload(spec.workload)
+    _check_block_engine(agg, spec.strategies, "async",
+                        num_classes=wl.num_classes(wl.dataset(ds)))
     e_blocks, block_size = _resolve_blocks(spec.fl.num_clients, opts)
     k_buf = int(opts.get("buffer_k", e_blocks))
     alpha = float(opts.get("alpha", 0.5))
@@ -652,15 +698,13 @@ def make_population_round(*, plan_fn: Callable[[Array, Array], Array],
     applies the two-tier reduction.  Peak memory is O(block_size·n +
     budget·payload) — flat in N, which is what BENCH_population's compiled
     ``memory_analysis`` sweep records up to N = 10⁶."""
-    if strategy in NON_BLOCK_SEPARABLE:
-        raise ValueError(f"strategy {strategy!r} is not block-separable; "
-                         "see repro.fl.population.NON_BLOCK_SEPARABLE")
     if num_clients % block_size:
         raise ValueError(f"block_size ({block_size}) must divide num_clients "
                          f"({num_clients})")
     wl = get_workload(workload)
     ds = wl.dataset(ds)
     n_classes = wl.num_classes(ds)
+    _check_block_separable(strategy, "population", n_classes)
     e_blocks = num_clients // block_size
     budget = max(1, min(int(budget), num_clients))
     opt = get_optimizer(optimizer, lr)

@@ -19,7 +19,6 @@ server-side SGD step (the paper's FedSGD baseline).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Tuple
 
 import jax

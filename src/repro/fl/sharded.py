@@ -67,7 +67,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.clustering import cluster_counts, kmeans_cluster
-from repro.core.selection import (SelectFn, SelectionResult, get_strategy,
+from repro.core.selection import (SelectFn, get_strategy,
                                   selection_budget, topn_mask)
 from repro.core.aggregation import (exchange_selected_shards,
                                     gather_client_shards, psum_weighted_mean)

@@ -154,7 +154,8 @@ _WORKLOADS: Dict[str, Workload] = {}
 
 
 def register_workload(name: str, workload: Workload, *,
-                      overwrite: bool = False) -> Workload:
+                      overwrite: bool = False,
+                      check: bool = False) -> Workload:
     """Register ``workload`` under ``name``.
 
     Every engine (compiled sim grid, host parity loop, sharded SPMD round)
@@ -162,7 +163,13 @@ def register_workload(name: str, workload: Workload, *,
     ``ExperimentSpec.workload`` — no engine edits to add a model family.
     Re-registering an existing name requires ``overwrite=True`` and swaps the
     bundle in place; specs naming it pick up the new bundle on their next
-    ``run``.  Returns ``workload`` for decorator-style use."""
+    ``run``.  Returns ``workload`` for decorator-style use.
+
+    ``check=True`` runs the jaxpr contract passes (repro.analysis) over the
+    bundle BEFORE registering — materialize schema (labels/valid/hists +
+    batch_keys, histogram width), traceable init/loss, eval metrics
+    containing "accuracy" — raising ``repro.analysis.ContractError`` with
+    structured diagnostics."""
     if not name or not isinstance(name, str):
         raise ValueError(f"workload name must be a non-empty str; got {name!r}")
     if name in _WORKLOADS and not overwrite:
@@ -173,6 +180,9 @@ def register_workload(name: str, workload: Workload, *,
                         f"got {type(workload)}")
     if workload.name != name:
         workload = dataclasses.replace(workload, name=name)
+    if check:
+        from repro.analysis import assert_workload_contract
+        assert_workload_contract(name, workload)
     _WORKLOADS[name] = workload
     return workload
 

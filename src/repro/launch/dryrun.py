@@ -121,7 +121,6 @@ def dryrun_fl_round(multi_pod: bool = True, save: bool = True,
     from jax.sharding import PartitionSpec as P
     from repro.fl import make_sharded_fl_round
     from repro.models import cnn_init, cnn_loss
-    from repro.optim import sgd, apply_updates
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     client_axis = "pod" if multi_pod else "data"

@@ -14,7 +14,6 @@ phases).
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from typing import Dict, Tuple
 

@@ -10,13 +10,11 @@ clustering over domain-skewed token streams (DESIGN.md §5's LM mapping).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import sharding as sh
 from repro.ckpt import save_checkpoint
@@ -25,8 +23,8 @@ from repro.configs.shapes import InputShape
 from repro.data import TokenDataset
 from repro.launch.mesh import make_debug_mesh
 from repro.launch.steps import make_train_step
-from repro.models import init_model, loss_fn
-from repro.optim import adamw, apply_updates, clip_by_global_norm
+from repro.models import init_model
+from repro.optim import adamw
 
 
 def synth_lm_batch(ds: TokenDataset, key, batch: int, domains=None):

@@ -10,7 +10,7 @@ encoder + token ids → decoder).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -14,7 +14,6 @@ Three entry points per model:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

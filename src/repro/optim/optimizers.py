@@ -14,7 +14,6 @@ structure ⇒ same NamedSharding under pjit).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax

@@ -11,7 +11,6 @@ Pallas kernel sweeps, launch-step plans) runs with::
 Any explicit ``-m`` expression (including ``-m ""``? no — empty means unset)
 overrides the default.  See ROADMAP.md §Test tiers.
 """
-import pytest
 
 
 def pytest_configure(config):

@@ -1,0 +1,316 @@
+"""Static-analysis subsystem tests: the jaxpr contract passes, the
+block-separability classifier, the repo AST lint, and the three surfaces
+(``python -m repro.analysis``, ``ExperimentSpec.validate(deep=True)``,
+``register_*(..., check=True)``).
+
+The seeded-violation tests register deliberately broken strategies /
+workloads (without ``check=``, the way a buggy extension would sneak in)
+and assert each violation surfaces as a STRUCTURED diagnostic — a stable
+code on a ``ContractError`` at ``validate(deep=True)`` — instead of a
+mid-compile stack trace inside an engine.
+"""
+import contextlib
+import subprocess
+import sys
+import dataclasses
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (ContractError, Findings, check_registries,
+                            classify_strategy, run_repo_checks)
+from repro.configs.paper_cnn import FLConfig
+from repro.core.selection import (STRATEGIES, SelectionResult,
+                                  _REGISTRY_ORDER, register_strategy)
+from repro.fl import ExperimentSpec, ScenarioSpec, run
+from repro.fl.workloads import _WORKLOADS, get_workload, register_workload
+
+MICRO16 = FLConfig(num_clients=16, clients_per_round=4, global_epochs=1,
+                   local_epochs=1, batch_size=8, lr=1e-3)
+
+
+@contextlib.contextmanager
+def _temp_strategy(name, fn):
+    """Register a (possibly broken) strategy and ALWAYS unregister it —
+    later test files sweep STRATEGIES.items() and would trip over it."""
+    register_strategy(name, fn, overwrite=True)
+    try:
+        yield
+    finally:
+        STRATEGIES.pop(name, None)
+        if name in _REGISTRY_ORDER:
+            _REGISTRY_ORDER.remove(name)
+
+
+@contextlib.contextmanager
+def _temp_workload(name, wl):
+    register_workload(name, wl, overwrite=True)
+    try:
+        yield
+    finally:
+        _WORKLOADS.pop(name, None)
+
+
+def _spec(**kw):
+    base = dict(scenarios=(ScenarioSpec.from_case("iid"),),
+                strategies=("labelwise",))
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# Deliberately broken registry entries (the seeded violations)
+# ---------------------------------------------------------------------------
+
+def _bad_dtype_strategy(key, hists, n_select=None):
+    """SelectionResult schema violation: mask is int32, order is float32."""
+    del key
+    scores = hists.sum(-1)
+    return SelectionResult(mask=(scores > 0).astype(jnp.int32),
+                           scores=scores,
+                           order=jnp.argsort(-scores).astype(jnp.float32),
+                           budget=n_select)
+
+
+def _traced_bool_strategy(key, hists, n_select=None):
+    """Host-side concretization: branches on a traced array truth value."""
+    del key
+    scores = hists.sum(-1)
+    if scores.sum() > 0:          # ConcretizationTypeError under tracing
+        scores = scores / scores.sum()
+    mask = (scores > 0).astype(jnp.float32)
+    order = jnp.argsort(-scores).astype(jnp.int32)
+    return SelectionResult(mask=mask, scores=scores, order=order,
+                           budget=n_select)
+
+
+def _traced_budget_strategy(key, hists, n_select=None):
+    """Budget must be a static Python int, not a traced 0-d array."""
+    del key
+    scores = hists.sum(-1)
+    mask = (scores > 0).astype(jnp.float32)
+    order = jnp.argsort(-scores).astype(jnp.int32)
+    return SelectionResult(mask=mask, scores=scores, order=order,
+                           budget=jnp.int32(4 if n_select is None
+                                            else n_select))
+
+
+def _const_seeded_strategy(key, hists, n_select=None):
+    """Ignores the engine's key and builds a constant-seeded PRNG stream."""
+    del key
+    k = jax.random.PRNGKey(0)
+    scores = jax.random.uniform(k, (hists.shape[0],))
+    mask = jnp.ones((hists.shape[0],), jnp.float32)
+    order = jnp.argsort(-scores).astype(jnp.int32)
+    return SelectionResult(mask=mask, scores=scores, order=order,
+                           budget=n_select)
+
+
+def _nonsep_strategy(key, hists, n_select=None):
+    """Row scores normalized by a population-wide total — NOT separable."""
+    del key
+    total = hists.sum()           # client-axis reduction
+    scores = hists.sum(-1) / (total + 1.0)
+    mask = (scores > 0).astype(jnp.float32)
+    order = jnp.argsort(-scores).astype(jnp.int32)
+    return SelectionResult(mask=mask, scores=scores, order=order,
+                           budget=n_select)
+
+
+def _missing_hists_workload():
+    cnn = get_workload("cnn")
+    orig = cnn.materialize
+
+    def materialize(ds, plan_t, key):
+        out = dict(orig(ds, plan_t, key))
+        out.pop("hists")          # schema violation: engines key on it
+        return out
+
+    return dataclasses.replace(cnn, materialize=materialize)
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: jaxpr contract passes
+# ---------------------------------------------------------------------------
+
+class TestSeededViolationsAtDeepValidate:
+    """Each seeded violation surfaces as a structured diagnostic (stable
+    code, kind, name) raised by validate(deep=True) — pre-compile."""
+
+    def test_bad_selection_result_dtype_is_A003(self):
+        with _temp_strategy("_an_bad_dtype", _bad_dtype_strategy):
+            with pytest.raises(ContractError) as ei:
+                _spec(strategies=("_an_bad_dtype",)).validate(deep=True)
+            codes = [d.code for d in ei.value.diagnostics
+                     if d.severity == "error"]
+            assert codes and set(codes) == {"A003"}
+            d = next(d for d in ei.value.diagnostics if d.code == "A003")
+            assert d.kind == "strategy" and d.name == "_an_bad_dtype"
+
+    def test_traced_bool_concretization_is_A001(self):
+        with _temp_strategy("_an_traced_bool", _traced_bool_strategy):
+            with pytest.raises(ContractError) as ei:
+                _spec(strategies=("_an_traced_bool",)).validate(deep=True)
+            errs = [d for d in ei.value.diagnostics if d.severity == "error"]
+            assert [d.code for d in errs] == ["A001"]
+            assert "concretizes" in errs[0].message
+            assert "Tracer" in errs[0].detail.get("error", "")
+
+    def test_missing_hists_key_is_A101(self):
+        with _temp_workload("_an_no_hists", _missing_hists_workload()):
+            with pytest.raises(ContractError) as ei:
+                _spec(workload="_an_no_hists").validate(deep=True)
+            errs = [d for d in ei.value.diagnostics if d.severity == "error"]
+            assert any(d.code == "A101" and d.kind == "workload" and
+                       d.name == "_an_no_hists" for d in errs)
+
+    def test_traced_budget_is_A004(self):
+        with _temp_strategy("_an_traced_budget", _traced_budget_strategy):
+            with pytest.raises(ContractError) as ei:
+                _spec(strategies=("_an_traced_budget",)).validate(deep=True)
+            assert "A004" in [d.code for d in ei.value.diagnostics]
+
+    def test_const_seeded_prng_is_A006(self):
+        with _temp_strategy("_an_const_seed", _const_seeded_strategy):
+            with pytest.raises(ContractError) as ei:
+                _spec(strategies=("_an_const_seed",)).validate(deep=True)
+            assert "A006" in [d.code for d in ei.value.diagnostics]
+
+    def test_clean_spec_passes_deep(self):
+        _spec(strategies=("labelwise", "kl", "entropy")).validate(deep=True)
+
+    def test_contract_error_renders_codes(self):
+        with _temp_strategy("_an_bad_dtype", _bad_dtype_strategy):
+            with pytest.raises(ContractError, match="A003"):
+                _spec(strategies=("_an_bad_dtype",)).validate(deep=True)
+
+
+class TestRegistrationTimeCheck:
+    def test_check_true_blocks_broken_registration(self):
+        with pytest.raises(ContractError):
+            register_strategy("_an_reject_me", _bad_dtype_strategy,
+                              check=True)
+        assert "_an_reject_me" not in STRATEGIES
+        assert "_an_reject_me" not in _REGISTRY_ORDER
+
+    def test_check_true_accepts_clean_strategy(self):
+        with _temp_strategy("_an_ok", STRATEGIES["labelwise"]):
+            pass  # registering a known-good callable under check is fine
+        register_strategy("_an_ok2", STRATEGIES["labelwise"], check=True)
+        STRATEGIES.pop("_an_ok2", None)
+        _REGISTRY_ORDER.remove("_an_ok2")
+
+    def test_check_true_accepts_builtin_workload(self):
+        with _temp_workload("_an_cnn2", get_workload("cnn")):
+            pass
+        register_workload("_an_cnn3", get_workload("cnn"), check=True)
+        _WORKLOADS.pop("_an_cnn3", None)
+
+
+class TestRegistrySweep:
+    def test_builtin_registries_are_clean(self):
+        findings = check_registries()
+        # Other test files deliberately register broken "_test_*" entries
+        # (and the sweep rightly flags them) — the builtin surface itself
+        # must be clean.
+        errs = [d for d in findings.errors() if not d.name.startswith("_")]
+        assert errs == []
+        # the sweep still REPORTS: one A007 classification per strategy
+        assert {d.name for d in findings.by_code("A007")} >= {
+            "random", "labelwise", "labelwise_priority"}
+
+
+# ---------------------------------------------------------------------------
+# Layer 1b: block-separability classification
+# ---------------------------------------------------------------------------
+
+class TestSeparabilityMatrix:
+    ROW_WISE = ("labelwise", "labelwise_unnorm", "coverage", "kl",
+                "entropy", "full", "dirichlet_uniformity")
+
+    def test_builtin_matrix(self):
+        import repro.fl.experiment  # noqa: F401  (registers ids 7–8)
+        for name in self.ROW_WISE:
+            v = classify_strategy(STRATEGIES[name], name=name)
+            assert v.separable, (name, v.reasons)
+            assert v.scores_dep == "row", (name, v.scores_dep)
+        v = classify_strategy(STRATEGIES["random"], name="random")
+        assert v.separable and v.scores_dep == "const"
+
+    def test_labelwise_priority_is_global(self):
+        v = classify_strategy(STRATEGIES["labelwise_priority"],
+                              name="labelwise_priority")
+        assert not v.separable
+        assert v.scores_dep == "global"
+        assert any("client axis" in r for r in v.reasons)
+
+    def test_custom_global_denominator_caught_statically(self):
+        v = classify_strategy(_nonsep_strategy, name="_nonsep")
+        assert not v.separable and v.scores_dep == "global"
+
+    def test_hier_engine_rejects_custom_non_separable(self):
+        """Satellite pin: a deliberately non-separable EXTENSION strategy is
+        refused by engine='hier' pre-compile, via the analyzer verdict (the
+        name is not in the NON_BLOCK_SEPARABLE denylist)."""
+        from repro.fl.population import NON_BLOCK_SEPARABLE
+        assert "_an_nonsep" not in NON_BLOCK_SEPARABLE
+        with _temp_strategy("_an_nonsep", _nonsep_strategy):
+            spec = _spec(strategies=("_an_nonsep",), engine="hier", fl=MICRO16,
+                         scenarios=(ScenarioSpec.from_case(
+                             "case1b", samples_per_client=8),),
+                         eval_n_per_class=2)
+            with pytest.raises(ValueError, match="not block-separable"):
+                run(spec)
+
+    def test_allowlist_vouches_past_classifier(self):
+        from repro.fl.population import (ASSUME_BLOCK_SEPARABLE,
+                                         _check_block_separable)
+        with _temp_strategy("_an_vouched", _nonsep_strategy):
+            with pytest.raises(ValueError):
+                _check_block_separable("_an_vouched", "hier", 10)
+            ASSUME_BLOCK_SEPARABLE.add("_an_vouched")
+            try:
+                _check_block_separable("_an_vouched", "hier", 10)
+            finally:
+                ASSUME_BLOCK_SEPARABLE.discard("_an_vouched")
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: repo AST lint + CLI
+# ---------------------------------------------------------------------------
+
+class TestRepoLint:
+    def test_repo_is_lint_clean(self):
+        findings = run_repo_checks()
+        assert findings.errors() == []
+
+    def test_engine_import_rule_fires(self, tmp_path):
+        from repro.analysis.ast_checks import _check_engine_imports
+        bad = tmp_path / "src" / "repro" / "fl" / "sim.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text("from repro.models import cnn_init\n")
+        f = Findings()
+        _check_engine_imports(tmp_path, f)
+        assert [d.code for d in f.errors()] == ["L001"]
+
+
+class TestCLI:
+    def test_module_exits_zero_on_clean_repo(self):
+        # Fresh interpreter: the analyzer sees only import-time registrations,
+        # not this test session's seeded breakage.
+        import os
+        repo = Path(__file__).resolve().parents[1]
+        env = dict(os.environ, PYTHONPATH=str(repo / "src"))
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--quiet"],
+            capture_output=True, text=True, timeout=600, cwd=repo, env=env)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "0 error(s)" in proc.stdout
+
+    def test_json_findings_shape(self):
+        findings = check_registries()
+        for d in findings:
+            rec = d.to_dict()
+            assert set(rec) >= {"code", "severity", "kind", "name", "message"}

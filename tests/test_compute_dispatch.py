@@ -23,7 +23,6 @@ import numpy as np
 import pytest
 
 from repro.core.label_stats import histogram
-from repro.core.aggregation import masked_mean
 from repro.kernels import (client_histograms, compute_backend,
                            masked_weighted_mean, weighted_sum_tree)
 from repro.kernels.dispatch import ENV_VAR, client_statistics

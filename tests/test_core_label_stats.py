@@ -1,8 +1,6 @@
 """Unit + property tests for repro.core.label_stats / kl / clustering."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -11,7 +9,7 @@ except ImportError:  # pragma: no cover
     HAVE_HYPOTHESIS = False
 
 from repro.core import (histogram, label_variance, label_variance_normed,
-                        coverage, rank_remap_values, kl_to_uniform,
+                        rank_remap_values, kl_to_uniform,
                         uniformity_score, area_index, num_areas_upper_bound,
                         selection_priority, greedy_area_selection,
                         cluster_sizes, expected_coverage_per_round)

@@ -1,7 +1,6 @@
 """Tests for the data pipeline, input specs, and sharding-rule machinery."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -3,13 +3,12 @@
 Uses a scaled-down version of the paper's §VI setup (fewer clients/rounds)
 so the suite stays fast; the full-size runs live in benchmarks/.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 pytestmark = pytest.mark.slow  # multi-minute tier; see tests/conftest.py
 

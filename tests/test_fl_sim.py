@@ -5,12 +5,11 @@ The parity test is the regression anchor for repro/fl/sim.py: the engine's
 lax.scan round loop must reproduce the legacy host loop's trajectories (same
 fold_in key tree, same round math) within float tolerance.
 """
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.paper_cnn import FLConfig
-from repro.core import (CASES, apply_availability, availability_plan,
+from repro.core import (apply_availability, availability_plan,
                         case_label_plan, quantity_skew)
 from repro.fl import (registered_strategies, run_fl, run_fl_host, run_grid,
                       simulate, stack_case_plans, strategy_id)

@@ -1,6 +1,5 @@
 """Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
 (interpret=True — kernel bodies execute in Python on CPU; TPU is the target)."""
-import functools
 
 import jax
 import jax.numpy as jnp

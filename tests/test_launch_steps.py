@@ -5,7 +5,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytestmark = pytest.mark.slow  # per-arch lowering, minutes; see conftest.py

@@ -9,7 +9,6 @@ import pytest
 
 pytestmark = pytest.mark.slow  # SSD/attention oracles, ~1 min; see conftest.py
 
-from repro.configs import get_config
 from repro.models import layers as L
 from repro.models.config import ModelConfig
 

@@ -8,7 +8,6 @@ acceptance micro smoke: engine="hier" ≡ engine="sim" at N=32, E=4.  The
 slow tier adds the async FedBuff degenerate pin (τ=0, K=E, strategy="full"
 ≡ flat FedAvg) and a staleness-behavior smoke.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +24,6 @@ from repro.fl import (ExperimentSpec, ScenarioSpec, availability,
                       default_num_blocks, derive_arrival_schedule,
                       make_population_round, run, staleness_weight,
                       streamed_selection, synthetic_population_plan)
-from repro.fl.population import NON_BLOCK_SEPARABLE
 from repro.fl.workloads import get_workload, materialize_rows
 from repro.kernels.dispatch import client_histograms
 

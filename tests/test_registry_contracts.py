@@ -1,0 +1,171 @@
+"""One parametrized contract test across all five registry axes.
+
+Every open registry (strategies, aggregators, workloads, engines,
+transforms) honors the same contract: builtin names are pinned at their
+seed positions (and, where the registry keeps an integer-id ledger, at
+their pinned ids), registration is append-only (existing entries never
+move), ``overwrite=True`` swaps the entry in place without changing its
+position, and a spec naming an unknown entry raises at
+``ExperimentSpec.validate()`` — pre-compile, never mid-engine.
+"""
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import pytest
+
+from repro.core.aggregation import (AGGREGATORS, Aggregator, aggregator_id,
+                                    register_aggregator,
+                                    registered_aggregators)
+from repro.core.selection import (STRATEGIES, register_strategy,
+                                  registered_strategies, strategy_id)
+from repro.fl.experiment import (_ENGINES, _TRANSFORMS, ExperimentSpec,
+                                 ScenarioSpec, TransformSpec,
+                                 engine_option_keys, engines, register_engine,
+                                 register_transform, registered_transforms)
+from repro.fl.workloads import (_WORKLOADS, get_workload, register_workload,
+                                registered_workloads)
+
+
+def _spec(**kw) -> ExperimentSpec:
+    base = dict(scenarios=(ScenarioSpec.from_case("iid"),),
+                strategies=("labelwise",))
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def _unknown_transform_spec() -> ExperimentSpec:
+    sc = ScenarioSpec.from_case("iid", transforms=(
+        TransformSpec(kind="_rc_no_such_transform"),))
+    return _spec(scenarios=(sc,))
+
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """Uniform view of one registry for the parametrized contract test."""
+    label: str
+    builtins: Tuple[str, ...]
+    names: Callable[[], Tuple[str, ...]]
+    register: Callable[[str, Any], Any]       # (name, entry) w/ overwrite
+    entry: Callable[[int], Any]               # i -> distinct registrable entry
+    lookup: Callable[[str], Any]
+    ident: Optional[Callable[[str], int]]     # stable-id ledger, if any
+    bad_spec: Callable[[], ExperimentSpec]    # spec naming an unknown entry
+
+
+def _strategy_entry(i):
+    fns = (STRATEGIES["labelwise"], STRATEGIES["kl"])
+    return fns[i]
+
+
+AXES = (
+    Axis("strategies",
+         ("random", "labelwise", "labelwise_unnorm", "coverage", "kl",
+          "entropy", "full", "labelwise_priority", "dirichlet_uniformity"),
+         registered_strategies,
+         lambda n, e: register_strategy(n, e, overwrite=True),
+         _strategy_entry,
+         lambda n: STRATEGIES[n],
+         strategy_id,
+         lambda: _spec(strategies=("_rc_no_such_strategy",))),
+    Axis("aggregators",
+         ("fedavg", "fedsgd", "clustered_fedavg", "clustered_fedsgd",
+          "clustered_fedavg4", "clustered_fedavg8"),
+         registered_aggregators,
+         lambda n, e: register_aggregator(n, e, overwrite=True),
+         lambda i: (Aggregator("fedavg"),
+                    Aggregator("fedsgd", n_clusters=3))[i],
+         lambda n: AGGREGATORS[n],
+         aggregator_id,
+         lambda: _spec(aggregation="_rc_no_such_aggregator")),
+    Axis("workloads",
+         ("cnn", "lm"),
+         registered_workloads,
+         lambda n, e: register_workload(n, e, overwrite=True),
+         lambda i: (get_workload("cnn"), get_workload("lm"))[i],
+         lambda n: _WORKLOADS[n],
+         None,
+         lambda: _spec(workload="_rc_no_such_workload")),
+    Axis("engines",
+         ("sim", "host", "sharded", "hier", "async"),
+         engines,
+         lambda n, e: register_engine(n, e, overwrite=True),
+         lambda i: ((lambda spec, lowered, ds: None),
+                    (lambda spec, lowered, ds, extra=1: None))[i],
+         lambda n: _ENGINES[n],
+         None,
+         lambda: _spec(engine="_rc_no_such_engine")),
+    Axis("transforms",
+         ("availability", "quantity_skew"),
+         registered_transforms,
+         lambda n, e: register_transform(n, e, overwrite=True),
+         lambda i: ((lambda plan, key, **kw: plan),
+                    (lambda plan, key, scale=1.0, **kw: plan))[i],
+         lambda n: _TRANSFORMS[n],
+         None,
+         _unknown_transform_spec),
+)
+
+IDS = tuple(a.label for a in AXES)
+
+
+@pytest.mark.parametrize("axis", AXES, ids=IDS)
+class TestRegistryContract:
+    def test_builtins_pinned(self, axis):
+        names = axis.names()
+        assert names[:len(axis.builtins)] == axis.builtins
+        if axis.ident is not None:
+            for i, name in enumerate(axis.builtins):
+                assert axis.ident(name) == i
+
+    def test_append_only_then_overwrite_keeps_position(self, axis):
+        name = f"_rc_append_{axis.label}"
+        before = axis.names()
+        axis.register(name, axis.entry(0))
+        after = axis.names()
+        # append-only: every pre-existing name keeps its position
+        assert after[:len(before)] == before or name in before
+        assert name in after
+        if axis.ident is not None:
+            assert axis.ident(name) == after.index(name)
+        # overwrite swaps the entry in place — names (and ids) are unmoved
+        first = axis.lookup(name)
+        axis.register(name, axis.entry(1))
+        assert axis.names() == after
+        if axis.ident is not None:
+            assert axis.ident(name) == after.index(name)
+        assert axis.lookup(name) is not first
+
+    def test_unknown_name_raises_at_validate(self, axis):
+        with pytest.raises((KeyError, ValueError)):
+            axis.bad_spec().validate()
+
+
+class TestEngineOptionDeclarations:
+    def test_builtin_declarations(self):
+        assert engine_option_keys("sim") == ()
+        assert engine_option_keys("host") == ()
+        assert engine_option_keys("sharded") == ()
+        assert engine_option_keys("hier") == ("num_blocks",)
+        assert engine_option_keys("async") == ("num_blocks", "buffer_k",
+                                               "alpha", "tau_max")
+        with pytest.raises(KeyError, match="unknown engine"):
+            engine_option_keys("_rc_no_such_engine")
+
+    def test_validate_rejects_undeclared_keys(self):
+        spec = _spec(engine="hier",
+                     engine_options={"num_blocks": 4, "bogus": 1})
+        with pytest.raises(ValueError, match="engine_options"):
+            spec.validate()
+        # declared keys pass
+        _spec(engine="hier", engine_options={"num_blocks": 4}).validate()
+        _spec(engine="async",
+              engine_options={"buffer_k": 2, "alpha": 0.5}).validate()
+        # engines registered without a declaration accept anything
+        register_engine("_rc_lax_engine", lambda spec, lowered, ds: None,
+                        overwrite=True)
+        _spec(engine="_rc_lax_engine",
+              engine_options={"whatever": 1}).validate()
+
+    def test_sim_rejects_population_knobs(self):
+        with pytest.raises(ValueError, match="engine_options"):
+            _spec(engine="sim", engine_options={"num_blocks": 4}).validate()

@@ -11,7 +11,6 @@ client is never trained).
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.paper_cnn import FLConfig
 from repro.core import (SelectionResult, apply_availability, register_strategy,

@@ -19,7 +19,7 @@ import pytest
 
 from repro.configs.paper_cnn import FLConfig
 from repro.core import case_label_plan
-from repro.fl import (ExperimentSpec, ScenarioSpec, Workload, availability,
+from repro.fl import (ExperimentSpec, ScenarioSpec,
                       get_workload, lm_workload, register_workload,
                       registered_workloads, run, run_fl_host, simulate)
 from repro.fl.workloads import MICRO_LM_CONFIG
