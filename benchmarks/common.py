@@ -71,18 +71,45 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+# Version of the BENCH_*.json report shape (top-level keys below + the
+# repro.obs telemetry block); bump on breaking layout changes.
+BENCH_SCHEMA_VERSION = 2
+
+
+def _git_sha() -> str:
+    """The repo HEAD sha the report was produced from ("unknown" outside a
+    checkout — e.g. an unpacked artifact re-run)."""
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+            check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
 def write_report(out_path: str, report: dict, *,
-                 compile_s: float | None = None) -> str:
+                 compile_s: float | None = None,
+                 telemetry: dict | None = None) -> str:
     """The one ``BENCH_*.json`` writer (all suites route through it).
 
     Injects the uniform top-level environment keys every report carries —
     ``compile_s`` (pass it explicitly, or leave the report's own value),
-    ``backend`` and ``device_count`` — so cached vs cold runs and
+    ``backend`` and ``device_count``, plus the provenance stamps
+    ``schema_version`` and ``git_sha`` — so cached vs cold runs and
     cross-backend numbers are comparable at a glance, then writes ``report``
-    to ``out_path`` (indent=2).  Returns ``out_path``."""
+    to ``out_path`` (indent=2).  Returns ``out_path``.
+
+    ``telemetry`` optionally embeds a run's ``meta["telemetry"]`` envelope
+    (repro.obs) under ``report["telemetry"]``; the accumulated trace-span
+    summary is always recorded under ``report["spans"]`` when any spans
+    fired, so BENCH artifacts carry the compile/execute breakdown."""
     import json
 
     import jax
+
+    from repro.obs import span_summary
 
     report = dict(report)
     if compile_s is not None:
@@ -90,8 +117,15 @@ def write_report(out_path: str, report: dict, *,
     elif "compile_s" not in report:
         raise ValueError("BENCH report needs a top-level compile_s — pass "
                          "compile_s= or put it in the report")
+    report["schema_version"] = BENCH_SCHEMA_VERSION
+    report["git_sha"] = _git_sha()
     report["backend"] = jax.default_backend()
     report["device_count"] = int(jax.device_count())
+    if telemetry is not None:
+        report["telemetry"] = telemetry
+    spans = span_summary()
+    if spans and "spans" not in report:
+        report["spans"] = spans
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     return out_path

@@ -17,10 +17,10 @@ deep=True)`` (pre-compile, exactly the spec's resolved entries), and the
 ``check=True`` keyword on ``register_strategy`` / ``register_workload`` /
 ``register_aggregator`` (registration-time opt-in).
 """
-from .contracts import (assert_aggregator_contract, assert_strategy_contract,
-                        assert_workload_contract, check_aggregator,
-                        check_registries, check_spec, check_strategy,
-                        check_workload)
+from .contracts import (assert_aggregator_contract, assert_metric_contract,
+                        assert_strategy_contract, assert_workload_contract,
+                        check_aggregator, check_metric, check_registries,
+                        check_spec, check_strategy, check_workload)
 from .diagnostics import ContractError, Diagnostic, Findings
 from .separability import SeparabilityVerdict, classify_strategy
 from .ast_checks import run_repo_checks
@@ -28,9 +28,9 @@ from .ast_checks import run_repo_checks
 __all__ = [
     "ContractError", "Diagnostic", "Findings",
     "SeparabilityVerdict", "classify_strategy",
-    "check_strategy", "check_workload", "check_aggregator",
+    "check_strategy", "check_workload", "check_aggregator", "check_metric",
     "check_spec", "check_registries",
     "assert_strategy_contract", "assert_workload_contract",
-    "assert_aggregator_contract",
+    "assert_aggregator_contract", "assert_metric_contract",
     "run_repo_checks",
 ]

@@ -359,6 +359,92 @@ def check_aggregator(name: str, agg, *, params: Any = None,
 
 
 # ---------------------------------------------------------------------------
+# Metric contract (repro.obs registry)
+# ---------------------------------------------------------------------------
+
+# Metric series ride every engine's scan ys (one slot per round per grid
+# cell); anything bigger than this is a trajectory, not a metric.
+MAX_METRIC_ELEMS = 4096
+
+
+def _metric_state(num_clients: int, num_classes: int, n_clusters: int,
+                  buffer_k: int):
+    """The canonical abstract round-state: the superset of every engine's
+    documented keys (repro.obs.registry) at small shapes — dynamic
+    ShapeDtypeStruct leaves plus the static ints."""
+    params = {"w": jax.ShapeDtypeStruct((3, 2), jnp.float32),
+              "b": jax.ShapeDtypeStruct((2,), jnp.float32)}
+    cent = jax.ShapeDtypeStruct((n_clusters, num_classes), jnp.float32)
+    dyn = {
+        "hists": jax.ShapeDtypeStruct((num_clients, num_classes),
+                                      jnp.float32),
+        "mask": jax.ShapeDtypeStruct((num_clients,), jnp.float32),
+        "params_old": params, "params_new": params,
+        "assign": jax.ShapeDtypeStruct((num_clients,), jnp.int32),
+        "centroids": cent, "prev_centroids": cent,
+        "staleness_delays": jax.ShapeDtypeStruct((buffer_k,), jnp.int32),
+    }
+    return dyn
+
+
+def check_metric(name: str, metric: Any = None, *, num_clients: int = 16,
+                 num_classes: int = 10, n_clusters: int = 4,
+                 buffer_k: int = 4, tau_max: int = 2) -> Findings:
+    """Verify one round metric (repro.obs registry) against its contract:
+    ``fn(round_state)`` traceable over the canonical abstract state (A301),
+    returning exactly one small array whose rank matches the declared
+    trailing ``axes`` (A302), with no forbidden primitives in the traced
+    body (the shared A005/A006 scan) — metrics compile INTO the engines'
+    scan bodies, so a callback here would host-sync every round."""
+    from repro.obs import get_metric
+    out = Findings()
+    if metric is None:
+        metric = get_metric(name)
+    dyn = _metric_state(num_clients, num_classes, n_clusters, buffer_k)
+    statics = {"num_classes": num_classes, "n_clusters": n_clusters,
+               "tau_max": tau_max}
+
+    try:
+        closed = jax.make_jaxpr(
+            lambda d: metric.fn({**statics, **d}))(dyn)
+    except Exception as e:
+        first_line = str(e).strip().split("\n")[0]
+        verb = ("concretizes a traced value host-side"
+                if isinstance(e, TRACE_ERRORS)
+                else "raised under abstract evaluation")
+        out.add("A301", "error", "metric", name,
+                f"metric fn {verb} over the canonical round state "
+                f"({type(e).__name__}): {first_line}",
+                error=type(e).__name__)
+        return out
+
+    avals = list(closed.out_avals)
+    if len(avals) != 1:
+        out.add("A302", "error", "metric", name,
+                "metric fn must return one array (scalar or small vector); "
+                f"traced output has {len(avals)} array leaves",
+                leaves=len(avals))
+    else:
+        shape = tuple(int(d) for d in avals[0].shape)
+        size = 1
+        for d in shape:
+            size *= d
+        if size > MAX_METRIC_ELEMS:
+            out.add("A302", "error", "metric", name,
+                    f"metric output {list(shape)} has {size} elements "
+                    f"(> {MAX_METRIC_ELEMS}); series ride every engine's "
+                    "scan ys per round per grid cell and must stay small",
+                    shape=list(shape), size=size)
+        if len(shape) != len(metric.axes):
+            out.add("A302", "error", "metric", name,
+                    f"metric output rank {len(shape)} does not match the "
+                    f"declared trailing axes {list(metric.axes)}",
+                    shape=list(shape), axes=list(metric.axes))
+    _scan_forbidden(closed, "metric", name, "metric body", out)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Spec-level and registry-wide drivers
 # ---------------------------------------------------------------------------
 
@@ -395,6 +481,18 @@ def check_spec(spec, *, ds: Any = None) -> Findings:
         except Exception:
             params = None
         out.extend(check_aggregator(agg_name, agg, params=params))
+    # Requested round metrics trace at the spec's own client count; "auto"
+    # expands to every registered metric (the engines would resolve it the
+    # same way).
+    tel = tuple(getattr(spec, "telemetry", ()))
+    if tel:
+        from repro.obs import registered_metrics
+        names = registered_metrics() if "auto" in tel else \
+            tuple(dict.fromkeys(n for n in tel if n != "auto"))
+        for mname in names:
+            out.extend(check_metric(
+                mname, num_clients=max(2, min(int(spec.fl.num_clients), 64)),
+                num_classes=num_classes))
     return out
 
 
@@ -407,6 +505,7 @@ def check_registries() -> Findings:
     from repro.core.aggregation import AGGREGATORS
     from repro.core.selection import STRATEGIES
     from repro.fl.workloads import _WORKLOADS
+    from repro.obs import metrics_registry
 
     out = Findings()
     for name, fn in STRATEGIES.items():
@@ -415,6 +514,8 @@ def check_registries() -> Findings:
         out.extend(check_workload(name, wl))
     for name, agg in AGGREGATORS.items():
         out.extend(check_aggregator(name, agg))
+    for name, m in metrics_registry().items():
+        out.extend(check_metric(name, m))
     return out
 
 
@@ -438,5 +539,13 @@ def assert_aggregator_contract(name: str, agg, **kw: Any) -> None:
     """Raise :class:`ContractError` on a bad aggregation family — the
     ``register_aggregator(..., check=True)`` hook."""
     findings = check_aggregator(name, agg, **kw)
+    if findings.errors():
+        raise ContractError(findings)
+
+
+def assert_metric_contract(name: str, metric: Any = None, **kw: Any) -> None:
+    """Raise :class:`ContractError` on a bad round metric — the
+    ``register_metric(..., check=True)`` hook (repro.obs)."""
+    findings = check_metric(name, metric, **kw)
     if findings.errors():
         raise ContractError(findings)

@@ -23,6 +23,8 @@ Diagnostic codes (stable — tests pin them):
 ``A103``    workload eval metrics missing ``"accuracy"``
 ``A201``    aggregator ``reduce`` schema violation
 ``A202``    aggregator untraceable
+``A301``    metric fn untraceable over the canonical round state
+``A302``    metric output schema violation (leaves / size / axes rank)
 ``L001``    engine module imports model/dataset code
 ``L002``    registry mutated outside ``register_*`` at import time
 ``L003``    compile-heavy test missing ``@pytest.mark.slow``
@@ -37,7 +39,8 @@ from typing import Any, Dict, Iterable, Iterator, List
 
 SEVERITIES = ("error", "warning", "info")
 
-KINDS = ("strategy", "workload", "aggregator", "engine", "transform", "file")
+KINDS = ("strategy", "workload", "aggregator", "engine", "transform", "file",
+         "metric")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -394,6 +394,11 @@ class ExperimentSpec:
     # rejects keys outside that set (engines registered without a declaration
     # accept anything).
     engine_options: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # Requested round metrics (repro.obs registry): metric names, or
+    # ("auto",) for every builtin the engine can satisfy.  Empty falls back
+    # to the REPRO_TELEMETRY env var; with neither set the engines compile
+    # the identical telemetry-free program (trajectories are bit-identical).
+    telemetry: Tuple[str, ...] = ()
 
     @property
     def num_rounds(self) -> int:
@@ -442,6 +447,10 @@ class ExperimentSpec:
         get_aggregator(self.aggregation or self.fl.aggregation)
         from .workloads import get_workload
         get_workload(self.workload)  # unknown workloads raise pre-compile
+        from repro.obs import get_metric
+        for m in self.telemetry:
+            if m != "auto":
+                get_metric(m)        # unknown metric names raise pre-compile
         if deep:
             from repro.analysis import ContractError, check_spec
             findings = check_spec(self, ds=ds)
@@ -457,6 +466,7 @@ class ExperimentSpec:
             "eval_n_per_class": self.eval_n_per_class,
             "workload": self.workload,
             "engine_options": dict(self.engine_options),
+            "telemetry": list(self.telemetry),
         }
 
     @classmethod
@@ -470,7 +480,8 @@ class ExperimentSpec:
             aggregation=d.get("aggregation"), rounds=d.get("rounds"),
             eval_n_per_class=d.get("eval_n_per_class", 50),
             workload=d.get("workload", "cnn"),
-            engine_options=dict(d.get("engine_options", {})))
+            engine_options=dict(d.get("engine_options", {})),
+            telemetry=tuple(d.get("telemetry", ())))
 
 
 @dataclasses.dataclass
@@ -536,6 +547,17 @@ class ExperimentResult:
                 "accuracy": np.asarray(cl["cluster_accuracy"], np.float32),
                 "loss": np.asarray(cl["cluster_loss"], np.float32),
                 "assign": np.asarray(cl["cluster_assign"], np.int32)}
+
+    def telemetry(self) -> Optional[Dict[str, np.ndarray]]:
+        """The round-metric series from the versioned ``meta["telemetry"]``
+        envelope as float64 arrays, ``{name: (K, S, R, rounds, …)}`` —
+        leading axes follow ``AXES``, trailing axes are the metric's own
+        (``Metric.axes``).  ``None`` when the run collected no metrics."""
+        env = self.meta.get("telemetry")
+        if not env or not env.get("series"):
+            return None
+        from repro.obs import series_arrays
+        return series_arrays(env)
 
     def success_rate(self, threshold: float = 0.2) -> np.ndarray:
         """Paper Table II: fraction of seeds with final accuracy > τ; (K, S)."""
@@ -713,12 +735,19 @@ def _engine_sim(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
                       seeds=spec.seeds, aggregation=spec.aggregation,
                       rounds=spec.rounds, ds=ds, avail=avail,
                       eval_n_per_class=spec.eval_n_per_class,
-                      workload=spec.workload)
+                      workload=spec.workload, telemetry=spec.telemetry)
+    meta: Dict[str, Any] = {}
     if res.cluster_accuracy is not None:
+        meta.update(_clustered_meta(res.cluster_accuracy, res.cluster_loss,
+                                    res.cluster_assign))
+    if res.telemetry:
+        # The compiled grid stacks the scan's metric ys under the case →
+        # strategy → seed vmap nest, so each series is already
+        # (K, S, R, rounds, …); run() folds it into the envelope.
+        meta["_telemetry_series"] = res.telemetry
+    if meta:
         return (res.accuracy, res.loss, res.num_selected, res.wall_s,
-                res.compile_s, _clustered_meta(res.cluster_accuracy,
-                                               res.cluster_loss,
-                                               res.cluster_assign))
+                res.compile_s, meta)
     return res.accuracy, res.loss, res.num_selected, res.wall_s, res.compile_s
 
 
@@ -737,6 +766,8 @@ def _engine_host(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
         c_loss = np.zeros_like(c_acc)
         c_assign = np.zeros((k_n, s_n, r_n, t_n, spec.fl.num_clients),
                             np.int32)
+    compile_s = 0.0
+    tel: Dict[str, np.ndarray] = {}
     t0 = time.perf_counter()
     for k, low in enumerate(lowered):
         for r, seed in enumerate(spec.seeds):
@@ -746,7 +777,9 @@ def _engine_host(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
                                 aggregation=spec.aggregation,
                                 rounds=spec.rounds, ds=ds, seed=seed,
                                 eval_n_per_class=spec.eval_n_per_class,
-                                workload=spec.workload)
+                                workload=spec.workload,
+                                telemetry=spec.telemetry)
+                compile_s += h.compile_s
                 acc[k, s, r] = h.accuracy
                 loss[k, s, r] = h.loss
                 nsel[k, s, r] = h.num_selected
@@ -754,11 +787,21 @@ def _engine_host(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
                     c_acc[k, s, r] = h.cluster_accuracy
                     c_loss[k, s, r] = h.cluster_loss
                     c_assign[k, s, r] = h.cluster_assign
-    wall = time.perf_counter() - t0
+                for name, v in (h.telemetry or {}).items():
+                    v = np.asarray(v, np.float32)
+                    if name not in tel:
+                        tel[name] = np.zeros((k_n, s_n, r_n) + v.shape,
+                                             np.float32)
+                    tel[name][k, s, r] = v
+    # Per-cell AOT compiles are accounted separately (satellite of the
+    # wall_s/compile_s honesty fix): wall is pure execution time.
+    wall = time.perf_counter() - t0 - compile_s
+    meta: Dict[str, Any] = {}
     if agg.clustered:
-        return acc, loss, nsel, wall, 0.0, _clustered_meta(c_acc, c_loss,
-                                                           c_assign)
-    return acc, loss, nsel, wall, 0.0
+        meta.update(_clustered_meta(c_acc, c_loss, c_assign))
+    if tel:
+        meta["_telemetry_series"] = tel
+    return acc, loss, nsel, wall, compile_s, meta
 
 
 def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
@@ -796,10 +839,12 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     from jax.sharding import PartitionSpec as P
 
     from repro.data import client_batches
+    from repro.obs import (make_collector, resolve_metrics,
+                           resolve_telemetry_request)
     from repro.optim import get_optimizer
     from .client import local_gradient, local_train
     from .round import stack_global_params
-    from .sharded import make_sharded_fl_round
+    from .sharded import exchange_bytes_per_device, make_sharded_fl_round
     from .workloads import get_workload
 
     cfg = spec.fl
@@ -873,6 +918,18 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
             exchange=exchange, n_clusters=agg.n_clusters,
             kmeans_iters=agg.kmeans_iters)
         for strat in spec.strategies}
+    avail_keys = ["hists", "mask", "num_classes", "params_old", "params_new"]
+    if agg.clustered:
+        avail_keys += ["assign", "n_clusters", "centroids", "prev_centroids"]
+    metrics = resolve_metrics(
+        resolve_telemetry_request(spec.telemetry), avail_keys)
+    collector = None
+    if metrics:
+        collector = jax.jit(make_collector(
+            metrics, {"num_classes": wl.num_classes(ds),
+                      "n_clusters": agg.n_clusters}))
+    tel: Dict[str, np.ndarray] = {}
+    xbytes: Optional[Dict[str, int]] = None
     for k, low in enumerate(lowered):
         for r, seed in enumerate(spec.seeds):
             plan = low.composed_plan(r)
@@ -881,6 +938,7 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
             if agg.clustered:
                 init = stack_global_params(init, agg.n_clusters)
             params = {strat: init for strat in spec.strategies}
+            prev_cent = {strat: None for strat in spec.strategies}
             for t in range(t_n):
                 # Round data and keys depend only on (scenario, seed, round)
                 # — materialize once and step every strategy's own params.
@@ -888,11 +946,37 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
                 data = wl.materialize(ds, plan[t % plan.shape[0]],
                                       jax.random.fold_in(kt, 0))
                 batches = client_batches(data, cfg.batch_size, wl.batch_keys)
+                if xbytes is None:
+                    xbytes = {strat: exchange_bytes_per_device(
+                                  batches, n_clients, fn.budget_padded,
+                                  groups, exchange)
+                              for strat, fn in round_fns.items()
+                              if fn.exchange is not None}
                 k_sel = jax.random.fold_in(kt, 1)
                 for s, strat in enumerate(spec.strategies):
+                    params_old = params[strat]
                     params[strat], info = round_fns[strat](
                         params[strat], batches, data["labels"],
                         data["valid"], k_sel)
+                    if collector is not None:
+                        dyn = {"hists": data["hists"], "mask": info["mask"],
+                               "params_old": params_old,
+                               "params_new": params[strat]}
+                        if agg.clustered:
+                            cent = info["cluster_centroids"]
+                            prev = (prev_cent[strat]
+                                    if prev_cent[strat] is not None
+                                    else jnp.zeros_like(cent))
+                            dyn.update(assign=info["cluster_assign"],
+                                       centroids=cent, prev_centroids=prev)
+                            prev_cent[strat] = cent
+                        for name, v in collector(dyn).items():
+                            v = np.asarray(v, np.float32)
+                            if name not in tel:
+                                tel[name] = np.zeros(
+                                    (k_n, s_n, r_n, t_n) + v.shape,
+                                    np.float32)
+                            tel[name][k, s, r, t] = v
                     if agg.clustered:
                         l, a, acc_c, loss_c = eval_mix_jit(
                             params[strat], info["cluster_weights"])
@@ -914,10 +998,16 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
         "strategies": {
             strat: {"budget": fn.budget,
                     "trained_per_round": fn.trained_per_round,
-                    "flop_sparsity": fn.flop_sparsity}
+                    "flop_sparsity": fn.flop_sparsity,
+                    # Analytic per-device ring bytes of the gather-phase
+                    # batch exchange (None when no round ran).
+                    "exchange_bytes_per_device":
+                        None if xbytes is None else xbytes.get(strat)}
             for strat, fn in round_fns.items()}}}
     if agg.clustered:
         meta.update(_clustered_meta(c_acc, c_loss, c_assign))
+    if tel:
+        meta["_telemetry_series"] = tel
     return acc, loss, nsel, time.perf_counter() - t0, 0.0, meta
 
 
@@ -951,14 +1041,43 @@ def run(spec: ExperimentSpec, *, ds=None) -> ExperimentResult:
 
     Lowers every ScenarioSpec (source + ordered transforms) to arrays once,
     dispatches through the engine registry, and labels the output axes
-    (scenario, strategy, seed, round)."""
-    spec.validate()
-    lowered = [s.lower(spec.fl, spec.seeds, spec.num_rounds)
-               for s in spec.scenarios]
+    (scenario, strategy, seed, round).
+
+    Observability: each stage runs under a ``repro.obs`` trace span (and the
+    engine call under ``obs.profiler``, which also wraps it in
+    ``jax.profiler.trace`` when ``REPRO_TRACE_DIR`` is set); the engine's raw
+    metric series (``meta["_telemetry_series"]``) are folded into the
+    versioned ``meta["telemetry"]`` envelope together with the engine's
+    side facts, the span summary, and any compiled-module memory analyses.
+    The old per-engine keys (``meta["sharded"]`` / ``meta["population"]`` /
+    ``meta["clustered"]``) are kept as aliases of the envelope's
+    ``engine_facts``."""
+    from repro.obs import (build_envelope, memory_snapshots, profiler,
+                           record_duration, span, span_summary, write_trace)
+    with span("validate", engine=spec.engine):
+        spec.validate()
+    with span("lower_scenarios", engine=spec.engine):
+        lowered = [s.lower(spec.fl, spec.seeds, spec.num_rounds)
+                   for s in spec.scenarios]
     engine = _ENGINES[spec.engine]
-    out = engine(spec, lowered, ds)
+    n_mem = len(memory_snapshots())
+    with profiler(spec.engine):
+        out = engine(spec, lowered, ds)
     acc, loss, nsel, wall_s, compile_s = out[:5]
-    meta = out[5] if len(out) > 5 else {}
+    meta = dict(out[5]) if len(out) > 5 else {}
+    # The engines time their own compile/execute split internally (AOT
+    # lowering happens inside the engine); fold the totals into the span
+    # stream so the Chrome trace carries them.
+    record_duration(f"engine_compile:{spec.engine}", compile_s)
+    record_duration(f"engine_wall:{spec.engine}", wall_s)
+    series = meta.pop("_telemetry_series", None)
+    facts = {k: meta[k] for k in ("sharded", "population", "clustered")
+             if k in meta}
+    meta["telemetry"] = build_envelope(
+        spec.engine, series=series, engine_facts=facts or None,
+        spans=span_summary(),
+        memory_analysis=memory_snapshots()[n_mem:] or None)
+    write_trace()          # no-op unless REPRO_TRACE_DIR is set
     return ExperimentResult(
         scenarios=tuple(s.name for s in spec.scenarios),
         strategies=tuple(spec.strategies), seeds=tuple(spec.seeds),

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +26,8 @@ import numpy as np
 
 from repro.core import plan_round
 from repro.data import client_batches
+from repro.obs import (make_collector, record_memory_analysis, resolve_metrics,
+                       resolve_telemetry_request, span)
 from .round import make_fl_round, resolve_aggregator, stack_global_params
 from .workloads import Workload, get_workload
 
@@ -48,6 +50,11 @@ class FLHistory:
     cluster_accuracy: Optional[List[List[float]]] = None
     cluster_loss: Optional[List[List[float]]] = None
     cluster_assign: Optional[List[List[int]]] = None
+    # AOT round/eval compile time, excluded from wall_s (the host engine's
+    # half of the wall_s/compile_s honesty fix), and the per-round in-graph
+    # metric series (name → (rounds, …) lists) when telemetry is on.
+    compile_s: float = 0.0
+    telemetry: Optional[Dict[str, Any]] = None
 
     @property
     def final_accuracy(self) -> float:
@@ -108,11 +115,19 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
                 aggregation: Optional[str] = None, rounds: Optional[int] = None,
                 ds=None, seed: Optional[int] = None,
                 verbose: bool = False, eval_n_per_class: int = 50,
-                workload: "str | Workload" = "cnn") -> FLHistory:
+                workload: "str | Workload" = "cnn",
+                telemetry: Sequence[str] = ()) -> FLHistory:
     """Legacy host-driven loop: one jitted round per step, eval on host.
 
     The parity oracle generalizes over the same workload registry as the
-    compiled engine, so host≡sim trajectory pins hold per workload."""
+    compiled engine, so host≡sim trajectory pins hold per workload.
+
+    The round and eval functions are AOT-compiled on the first round under a
+    ``repro.obs`` compile span, so ``FLHistory.compile_s`` is real and
+    ``wall_s`` excludes it (the engines' wall-clock numbers are comparable).
+    ``telemetry`` names registered round metrics (or ``("auto",)``) evaluated
+    on the round's device arrays; the series land in
+    ``FLHistory.telemetry[name]`` as (rounds, …) stacks."""
     wl = get_workload(workload)
     ds = wl.dataset(ds)
     seed = fl_cfg.seed if seed is None else seed
@@ -141,38 +156,84 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
     else:
         eval_jit = jax.jit(lambda p: eval_fn(p, eval_batch))
 
+    avail_keys = ["hists", "mask", "num_classes", "params_old", "params_new"]
+    if agg.clustered:
+        avail_keys += ["assign", "n_clusters", "centroids", "prev_centroids"]
+    metrics = resolve_metrics(resolve_telemetry_request(telemetry), avail_keys)
+
     hist_acc, hist_loss, hist_sel = [], [], []
     c_acc, c_loss, c_assign = [], [], []
+    tel: Dict[str, List[np.ndarray]] = {}
+    compile_s = 0.0
+    round_exec = eval_exec = collector = prev_cent = None
     t0 = time.time()
     for t in range(rounds):
         kt = jax.random.fold_in(key, 1000 + t)
         data = wl.materialize(ds, plan_round(plan, t),
                               jax.random.fold_in(kt, 0))
         batches = client_batches(data, fl_cfg.batch_size, wl.batch_keys)
-        params, info = fl_round(params, batches, data["hists"],
-                                jax.random.fold_in(kt, 1))
+        key_t = jax.random.fold_in(kt, 1)
+        if round_exec is None:
+            # AOT-compile once so compile_s is accounted (not folded into
+            # wall_s) — round shapes are static across rounds.
+            with span("compile", engine="host", what="round") as sp:
+                round_exec = fl_round.lower(params, batches, data["hists"],
+                                            key_t).compile()
+            compile_s += sp.duration_s
+            record_memory_analysis("host:round", round_exec)
+        params_old = params
+        params, info = round_exec(params, batches, data["hists"], key_t)
         if agg.clustered:
-            loss, m, acc_c, loss_c = eval_jit(params, info["cluster_weights"])
+            if eval_exec is None:
+                with span("compile", engine="host", what="eval") as sp:
+                    eval_exec = eval_jit.lower(
+                        params, info["cluster_weights"]).compile()
+                compile_s += sp.duration_s
+            loss, m, acc_c, loss_c = eval_exec(params, info["cluster_weights"])
             c_acc.append(np.asarray(acc_c, np.float32).tolist())
             c_loss.append(np.asarray(loss_c, np.float32).tolist())
             c_assign.append(np.asarray(info["cluster_assign"],
                                        np.int32).tolist())
         else:
-            loss, m = eval_jit(params)
+            if eval_exec is None:
+                with span("compile", engine="host", what="eval") as sp:
+                    eval_exec = eval_jit.lower(params).compile()
+                compile_s += sp.duration_s
+            loss, m = eval_exec(params)
         ns, ms = float(info["num_selected"]), float(info["mask_sum"])
         assert ns == ms, (
             f"round {t}: selection budget violated — trained {ns} clients but "
             f"mask selects {ms}; a strategy's mask escaped its budget window")
+        if metrics:
+            if collector is None:
+                statics = {"num_classes": int(data["hists"].shape[1]),
+                           "n_clusters": agg.n_clusters}
+                collector = jax.jit(make_collector(metrics, statics))
+                if agg.clustered:
+                    prev_cent = jnp.zeros_like(info["cluster_centroids"])
+            dyn = {"hists": data["hists"], "mask": info["mask"],
+                   "params_old": params_old, "params_new": params}
+            if agg.clustered:
+                dyn.update(assign=info["cluster_assign"],
+                           centroids=info["cluster_centroids"],
+                           prev_centroids=prev_cent)
+                prev_cent = info["cluster_centroids"]
+            for name, v in collector(dyn).items():
+                tel.setdefault(name, []).append(np.asarray(v))
         hist_acc.append(float(m["accuracy"]))
         hist_loss.append(float(loss))
         hist_sel.append(float(info["num_selected"]))
         if verbose:
             print(f"  round {t + 1:3d}/{rounds}: acc={hist_acc[-1]:.4f} "
                   f"loss={hist_loss[-1]:.4f} selected={hist_sel[-1]:.0f}")
-    return FLHistory(hist_acc, hist_loss, hist_sel, time.time() - t0,
+    wall_s = time.time() - t0 - compile_s
+    return FLHistory(hist_acc, hist_loss, hist_sel, wall_s,
                      cluster_accuracy=c_acc if agg.clustered else None,
                      cluster_loss=c_loss if agg.clustered else None,
-                     cluster_assign=c_assign if agg.clustered else None)
+                     cluster_assign=c_assign if agg.clustered else None,
+                     compile_s=compile_s,
+                     telemetry={n: np.stack(v) for n, v in tel.items()}
+                     if tel else None)
 
 
 def success_rate(histories: List[FLHistory], threshold: float = 0.2) -> float:

@@ -83,6 +83,8 @@ from repro.core import (STRATEGIES, get_aggregator, interpolate,
 from repro.core.selection import NEG_INF
 from repro.data import client_batches
 from repro.kernels.dispatch import client_histograms, masked_weighted_mean
+from repro.obs import (collect_metrics, record_memory_analysis,
+                       resolve_metrics, resolve_telemetry_request)
 from repro.optim import apply_updates, get_optimizer
 from .client import local_gradient, local_train
 from .workloads import Workload, get_workload, materialize_rows
@@ -259,7 +261,8 @@ def make_hier_trial_fn(fl_cfg, ds=None, *, strategy: str,
                        rounds: Optional[int] = None,
                        eval_n_per_class: int = 50,
                        workload: "str | Workload" = "cnn",
-                       num_blocks: Optional[int] = None):
+                       num_blocks: Optional[int] = None,
+                       telemetry: Sequence[str] = ()):
     """Build ``trial(plan, seed, avail) -> (acc, loss, nsel, msum)`` — one
     hierarchical FL trial, jit-able, mirroring ``sim``'s key-derivation tree
     (same fold_in constants) so the two engines see identical randomness.
@@ -287,6 +290,9 @@ def make_hier_trial_fn(fl_cfg, ds=None, *, strategy: str,
     loss_fn = wl.make_loss(ds)
     eval_batch = wl.eval_set(ds, eval_n_per_class)
     eval_fn = wl.make_eval(ds)
+    metrics = resolve_metrics(
+        resolve_telemetry_request(telemetry),
+        ("hists", "mask", "num_classes", "params_old", "params_new"))
 
     def trial(plan: Array, seed: Array, avail: Array):
         t_static = plan.shape[0]
@@ -337,8 +343,18 @@ def make_hier_trial_fn(fl_cfg, ds=None, *, strategy: str,
                 lambda new, old: jnp.where(any_live, new, old),
                 new_params, params)
             ev_loss, ev_m = eval_fn(new_params, eval_batch)
-            return new_params, (ev_m["accuracy"], ev_loss, live.sum(),
-                                live.sum())
+            main = (ev_m["accuracy"], ev_loss, live.sum(), live.sum())
+            if metrics:
+                # Rebuild the dense (N,) selection mask from the streamed
+                # top-k: the init sentinel id (= num_clients) scatters out
+                # of bounds and is dropped.
+                mask = jnp.zeros((n_clients,), jnp.float32).at[ids].add(
+                    live, mode="drop")
+                state = {"hists": data["hists"] * avail_t[:, None],
+                         "mask": mask, "num_classes": n_classes,
+                         "params_old": params, "params_new": new_params}
+                return new_params, (main, collect_metrics(metrics, state))
+            return new_params, main
 
         _, traj = jax.lax.scan(round_body, params, jnp.arange(num_rounds))
         return traj
@@ -397,7 +413,8 @@ def make_async_trial_fn(fl_cfg, ds=None, *, strategy: str,
                         buffer_k: Optional[int] = None, alpha: float = 0.5,
                         tau_max: int = 2,
                         schedule: Optional[Tuple[np.ndarray,
-                                                 np.ndarray]] = None):
+                                                 np.ndarray]] = None,
+                        telemetry: Sequence[str] = ()):
     """Build ``trial(plan, seed, avail) -> (acc, loss, nsel)`` — one async
     FedBuff trial: rounds OVERLAP through a ring of the last ``tau_max + 1``
     parameter versions.
@@ -444,6 +461,10 @@ def make_async_trial_fn(fl_cfg, ds=None, *, strategy: str,
         raise ValueError(f"schedule shape {sched_blocks.shape} != "
                          f"(rounds, buffer_k) ({num_rounds}, {k_buf})")
     server_lr = fl_cfg.server_lr if agg.base == "fedavg" else 1.0
+    metrics = resolve_metrics(
+        resolve_telemetry_request(telemetry),
+        ("hists", "mask", "num_classes", "params_old", "params_new",
+         "staleness_delays", "tau_max"))
 
     def trial(plan: Array, seed: Array, avail: Array):
         t_static = plan.shape[0]
@@ -474,9 +495,16 @@ def make_async_trial_fn(fl_cfg, ds=None, *, strategy: str,
                             ring),
                         jnp.zeros((), jnp.float32),
                         jnp.zeros((), jnp.float32))
+            if metrics:
+                # Telemetry-only carry leaf: the dense selection mask
+                # accumulated across the window's K arrivals.
+                zero_buf = zero_buf + (jnp.zeros((n_clients,), jnp.float32),)
 
             def arrival(buf, j):
-                buf_num, buf_den, n_live = buf
+                if metrics:
+                    buf_num, buf_den, n_live, sel_mask = buf
+                else:
+                    buf_num, buf_den, n_live = buf
                 e = blocks_t[j]
                 tau = jnp.minimum(delays_t[j], t).astype(jnp.int32)
                 theta_stale = jax.tree_util.tree_map(
@@ -513,10 +541,17 @@ def make_async_trial_fn(fl_cfg, ds=None, *, strategy: str,
                 w = (live * sizes).sum() * staleness_weight(tau, alpha)
                 buf_num = jax.tree_util.tree_map(
                     lambda acc, d: acc + w * d, buf_num, delta)
+                if metrics:
+                    sel_mask = sel_mask.at[idx].add(live)
+                    return (buf_num, buf_den + w, n_live + live.sum(),
+                            sel_mask), None
                 return (buf_num, buf_den + w, n_live + live.sum()), None
 
-            (buf_num, buf_den, n_live), _ = jax.lax.scan(
-                arrival, zero_buf, jnp.arange(k_buf))
+            buf_out, _ = jax.lax.scan(arrival, zero_buf, jnp.arange(k_buf))
+            if metrics:
+                buf_num, buf_den, n_live, sel_mask = buf_out
+            else:
+                buf_num, buf_den, n_live = buf_out
             denom = jnp.maximum(buf_den, 1e-12)
             theta_new = jax.tree_util.tree_map(
                 lambda p, acc: (p + server_lr * (acc / denom)).astype(p.dtype),
@@ -528,7 +563,19 @@ def make_async_trial_fn(fl_cfg, ds=None, *, strategy: str,
                 lambda r, n: jax.lax.dynamic_update_index_in_dim(
                     r, n, (t + 1) % ring_len, 0), ring, theta_new)
             ev_loss, ev_m = eval_fn(theta_new, eval_batch)
-            return ring, (ev_m["accuracy"], ev_loss, n_live)
+            main = (ev_m["accuracy"], ev_loss, n_live)
+            if metrics:
+                state = {"hists": hists,
+                         # A block arriving twice in one window re-adds its
+                         # live clients; the mask is membership, so clamp.
+                         "mask": jnp.minimum(sel_mask, 1.0),
+                         "num_classes": n_classes,
+                         "params_old": theta_t, "params_new": theta_new,
+                         "staleness_delays": jnp.minimum(
+                             delays_t, t).astype(jnp.int32),
+                         "tau_max": int(tau_max)}
+                return ring, (main, collect_metrics(metrics, state))
+            return ring, main
 
         _, traj = jax.lax.scan(window_body, ring, jnp.arange(num_rounds))
         return traj
@@ -548,14 +595,20 @@ def _ones_avail(plan: np.ndarray) -> jnp.ndarray:
     return jnp.ones(plan.shape[:2], jnp.float32)
 
 
-def _run_cells(spec, lowered, make_trial, out_width: int):
+def _run_cells(spec, lowered, make_trial, out_width: int,
+               engine_label: str = "population"):
     """Shared grid driver: one AOT lower+compile per (scenario, strategy)
     cell — seeds share the compiled program (the seed is an argument) — and
-    per-seed execution, accumulating wall/compile seconds."""
+    per-seed execution, accumulating wall/compile seconds.
+
+    A trial fn with telemetry resolved returns ``(trajectories, {name:
+    (rounds, …)})``; the metric series are stacked into (K, S, R, rounds, …)
+    arrays and returned as the fourth element (None without telemetry)."""
     k_n, s_n, r_n = len(lowered), len(spec.strategies), len(spec.seeds)
     t_n = spec.num_rounds
     out = [np.zeros((k_n, s_n, r_n, t_n), np.float32)
            for _ in range(out_width)]
+    tel: Dict[str, np.ndarray] = {}
     wall = compile_s = 0.0
     for k, low in enumerate(lowered):
         av = (jnp.asarray(low.avail, jnp.float32) if low.avail is not None
@@ -570,12 +623,23 @@ def _run_cells(spec, lowered, make_trial, out_width: int):
                     t0 = time.perf_counter()
                     compiled = fn.lower(*args).compile()
                     compile_s += time.perf_counter() - t0
+                    record_memory_analysis(
+                        f"{engine_label}:{low.name}:{strat}", compiled)
                 t0 = time.perf_counter()
                 traj = jax.block_until_ready(compiled(*args))
                 wall += time.perf_counter() - t0
+                if (isinstance(traj, tuple) and len(traj) == 2
+                        and isinstance(traj[1], dict)):
+                    traj, mvals = traj
+                    for name, v in mvals.items():
+                        v = np.asarray(v, np.float32)
+                        if name not in tel:
+                            tel[name] = np.zeros((k_n, s_n, r_n) + v.shape,
+                                                 np.float32)
+                        tel[name][k, s, r] = v
                 for i in range(out_width):
                     out[i][k, s, r] = np.asarray(traj[i], np.float32)
-    return out, wall, compile_s
+    return out, wall, compile_s, tel or None
 
 
 def run_engine_hier(spec, lowered, ds):
@@ -593,14 +657,17 @@ def run_engine_hier(spec, lowered, ds):
             trials[strat] = make_hier_trial_fn(
                 spec.fl, ds, strategy=strat, aggregation=spec.aggregation,
                 rounds=spec.rounds, eval_n_per_class=spec.eval_n_per_class,
-                workload=spec.workload, num_blocks=e_blocks)
+                workload=spec.workload, num_blocks=e_blocks,
+                telemetry=getattr(spec, "telemetry", ()))
         return trials[strat]
 
-    (acc, loss, nsel, _msum), wall, compile_s = _run_cells(
-        spec, lowered, make_trial, 4)
+    (acc, loss, nsel, _msum), wall, compile_s, tel = _run_cells(
+        spec, lowered, make_trial, 4, engine_label="hier")
     meta = {"population": {
         "mode": "hier", "num_blocks": e_blocks, "block_size": block_size,
         "budgets": {s: t.budget for s, t in trials.items()}}}
+    if tel:
+        meta["_telemetry_series"] = tel
     return acc, loss, nsel, wall, compile_s, meta
 
 
@@ -632,17 +699,20 @@ def run_engine_async(spec, lowered, ds):
                 spec.fl, ds, strategy=strat, aggregation=spec.aggregation,
                 rounds=spec.rounds, eval_n_per_class=spec.eval_n_per_class,
                 workload=spec.workload, num_blocks=e_blocks, buffer_k=k_buf,
-                alpha=alpha, tau_max=tau_max, schedule=schedules[low.name])
+                alpha=alpha, tau_max=tau_max, schedule=schedules[low.name],
+                telemetry=getattr(spec, "telemetry", ()))
         return trials[cell]
 
-    (acc, loss, nsel), wall, compile_s = _run_cells(
-        spec, lowered, make_trial, 3)
+    (acc, loss, nsel), wall, compile_s, tel = _run_cells(
+        spec, lowered, make_trial, 3, engine_label="async")
     delays = np.stack([schedules[low.name][1] for low in lowered])
     meta = {"population": {
         "mode": "async", "num_blocks": e_blocks, "block_size": block_size,
         "buffer_k": k_buf, "alpha": alpha, "tau_max": tau_max,
         "staleness_weight": "1/(1+tau)^alpha",
         "delay_mean": float(delays.mean()), "delay_max": int(delays.max())}}
+    if tel:
+        meta["_telemetry_series"] = tel
     return acc, loss, nsel, wall, compile_s, meta
 
 

@@ -206,13 +206,14 @@ def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
         data_sel = jax.tree_util.tree_map(lambda x: x[idx], round_batches)
         extra = {}
         if agg.clustered:
-            assign, _ = kmeans_cluster(hists, agg.n_clusters,
-                                       n_iters=agg.kmeans_iters)
+            assign, cent = kmeans_cluster(hists, agg.n_clusters,
+                                          n_iters=agg.kmeans_iters)
             new_params, m = clustered_update_step(
                 global_params, assign[idx], data_sel, live, loss_fn, opt,
                 fl_cfg, agg)
             valid = (hists.sum(-1) > 0).astype(jnp.float32)
             extra = {"cluster_assign": assign,
+                     "cluster_centroids": cent,
                      "cluster_weights": cluster_counts(assign, agg.n_clusters,
                                                        weights=valid)}
         else:
@@ -223,6 +224,7 @@ def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
             **extra,
             "selected": idx,
             "live": live,
+            "mask": sel.mask,
             "num_selected": live.sum(),
             # mask.sum() must equal num_selected — the budget window covers
             # every mask-selected client; run_fl_host asserts it per round.

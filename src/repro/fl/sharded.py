@@ -245,8 +245,8 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
         if n_clusters > 1:
             # Replicated, deterministic — every shard computes the identical
             # assignment from the identical all-gathered histogram matrix.
-            assign, _ = kmeans_cluster(hists_all, n_clusters,
-                                       n_iters=kmeans_iters)
+            assign, cent = kmeans_cluster(hists_all, n_clusters,
+                                          n_iters=kmeans_iters)
             cl_my = assign[my_slots]                       # (slots,)
             params_slot = jax.tree_util.tree_map(
                 lambda g: g[cl_my], params)                # each slot's θ_c
@@ -272,6 +272,7 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
             valid_all = (hists_all.sum(-1) > 0).astype(jnp.float32)
             info = {"mask": sel.mask, "num_selected": sel.mask.sum(),
                     "scores": sel.scores, "cluster_assign": assign,
+                    "cluster_centroids": cent,
                     "cluster_weights": cluster_counts(assign, n_clusters,
                                                       weights=valid_all)}
             return new_global, info
@@ -306,7 +307,8 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
     lv_spec = P(client_axis)
     out_info_spec = {"mask": P(), "num_selected": P(), "scores": P()}
     if n_clusters > 1:   # replicated clustering facts join the info pytree
-        out_info_spec.update({"cluster_assign": P(), "cluster_weights": P()})
+        out_info_spec.update({"cluster_assign": P(), "cluster_weights": P(),
+                              "cluster_centroids": P()})
 
     in_specs = (params_pspec, batch_specs, lv_spec, lv_spec, P())
     if with_availability:

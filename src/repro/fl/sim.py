@@ -42,7 +42,7 @@ exactly one implementation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,8 @@ import numpy as np
 from repro.core import (STRATEGIES, cluster_counts, kmeans_cluster,
                         registered_strategies, selection_budget, strategy_id)
 from repro.data import client_batches
+from repro.obs import (collect_metrics, record_memory_analysis,
+                       resolve_metrics, resolve_telemetry_request)
 from repro.optim import get_optimizer
 from .round import (client_update_step, clustered_update_step,
                     resolve_aggregator, stack_global_params)
@@ -91,6 +93,10 @@ class GridResult:
     cluster_accuracy: Optional[np.ndarray] = None
     cluster_loss: Optional[np.ndarray] = None
     cluster_assign: Optional[np.ndarray] = None
+    # In-graph metric series (repro.obs registry): name → (*grid_axes,
+    # rounds, …) arrays, collected inside the scan when telemetry was
+    # requested; None otherwise (the compiled program is then unchanged).
+    telemetry: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def final_accuracy(self) -> np.ndarray:
@@ -143,7 +149,8 @@ def make_trial_fn(fl_cfg, ds=None, *,
                   rounds: Optional[int] = None,
                   eval_n_per_class: int = 50,
                   strategies: Optional[Sequence[str]] = None,
-                  workload: "str | Workload" = "cnn"):
+                  workload: "str | Workload" = "cnn",
+                  telemetry: Sequence[str] = ()):
     """Build ``trial(plan, sid, seed, avail) -> (acc, loss, nsel, msum)`` —
     one FL trial as a pure jit/vmap-able function of device arrays.
 
@@ -168,6 +175,13 @@ def make_trial_fn(fl_cfg, ds=None, *,
     valid-population-weighted mixture over the per-cluster models, followed
     by (rounds, n_clusters) per-cluster accuracy/loss and the (rounds, N)
     round k-means assignment.
+
+    ``telemetry`` names registered round metrics (repro.obs; ``("auto",)``
+    expands to every applicable builtin, empty falls back to the
+    ``REPRO_TELEMETRY`` env var).  With metrics resolved the trial returns
+    ``(trajectories, {name: (rounds, …)})`` — the metric series ride the
+    same scan ys — and with none resolved the returned function (and the
+    compiled program) is exactly the telemetry-free one.
     """
     wl = get_workload(workload)
     ds = wl.dataset(ds)
@@ -184,6 +198,14 @@ def make_trial_fn(fl_cfg, ds=None, *,
     loss_fn = wl.make_loss(ds)
     eval_batch = wl.eval_set(ds, eval_n_per_class)
     eval_fn = wl.make_eval(ds)
+    avail_keys = ["hists", "mask", "num_classes", "params_old", "params_new"]
+    if agg.clustered:
+        avail_keys += ["assign", "n_clusters", "centroids", "prev_centroids"]
+    metrics = resolve_metrics(resolve_telemetry_request(telemetry), avail_keys)
+    # Only clustered centroid-drift needs last round's centroids in the scan
+    # carry; everything else observes the current round alone.
+    needs_prev = agg.clustered and any(
+        "prev_centroids" in m.requires for m in metrics)
 
     def trial(plan: Array, sid: Array, seed: Array, avail: Array):
         t_static = plan.shape[0]
@@ -191,8 +213,19 @@ def make_trial_fn(fl_cfg, ds=None, *,
         params = wl.init(jax.random.fold_in(key, 1), ds)
         if agg.clustered:
             params = stack_global_params(params, agg.n_clusters)
+        if needs_prev:
+            # (M, C) zeros for round 0 — C via a shape-only materialize probe
+            # (trace-time, no FLOPs).
+            probe = jax.eval_shape(
+                lambda p: wl.materialize(ds, p, jax.random.PRNGKey(0)),
+                jax.ShapeDtypeStruct(plan.shape[1:], jnp.int32))
+            carry0 = (params, jnp.zeros(
+                (agg.n_clusters, probe["hists"].shape[1]), jnp.float32))
+        else:
+            carry0 = params
 
-        def round_body(params, t):
+        def round_body(carry, t):
+            params, prev_cent = carry if needs_prev else (carry, None)
             # Same fold_in tree as the host loop — parity is bit-for-bit in
             # the randomness, so trajectories differ only by op reordering.
             kt = jax.random.fold_in(key, 1000 + t)
@@ -218,9 +251,24 @@ def make_trial_fn(fl_cfg, ds=None, *,
             idx = order[:budget]          # the strategy's static gather width
             live = mask[idx]
             data_sel = jax.tree_util.tree_map(lambda x: x[idx], batches)
+
+            def emit(new_params, main, cent=None, assign=None):
+                # Metric collection is additive: the trajectory tuple is
+                # untouched, the series ride alongside as a second ys leaf.
+                new_carry = (new_params, cent) if needs_prev else new_params
+                if not metrics:
+                    return new_carry, main
+                state = {"hists": hists, "mask": mask,
+                         "num_classes": hists.shape[1],
+                         "params_old": params, "params_new": new_params}
+                if agg.clustered:
+                    state.update(assign=assign, n_clusters=agg.n_clusters,
+                                 centroids=cent, prev_centroids=prev_cent)
+                return new_carry, (main, collect_metrics(metrics, state))
+
             if agg.clustered:
-                assign, _ = kmeans_cluster(hists, agg.n_clusters,
-                                           n_iters=agg.kmeans_iters)
+                assign, cent = kmeans_cluster(hists, agg.n_clusters,
+                                              n_iters=agg.kmeans_iters)
                 new_params, m = clustered_update_step(
                     params, assign[idx], data_sel, live, loss_fn, opt,
                     fl_cfg, agg)
@@ -235,18 +283,20 @@ def make_trial_fn(fl_cfg, ds=None, *,
                 valid = (hists.sum(-1) > 0).astype(jnp.float32)
                 w = cluster_counts(assign, agg.n_clusters, weights=valid)
                 tot = jnp.maximum(w.sum(), 1.0)
-                return new_params, ((acc_c * w).sum() / tot,
-                                    (loss_c * w).sum() / tot,
-                                    live.sum(), mask.sum(),
-                                    acc_c, loss_c, assign)
+                return emit(new_params,
+                            ((acc_c * w).sum() / tot,
+                             (loss_c * w).sum() / tot,
+                             live.sum(), mask.sum(),
+                             acc_c, loss_c, assign),
+                            cent=cent, assign=assign)
             new_params, m = client_update_step(params, data_sel, live,
                                                loss_fn, opt, fl_cfg, agg)
 
             ev_loss, ev_m = eval_fn(new_params, eval_batch)
-            return new_params, (ev_m["accuracy"], ev_loss, live.sum(),
-                                mask.sum())
+            return emit(new_params, (ev_m["accuracy"], ev_loss, live.sum(),
+                                     mask.sum()))
 
-        _, traj = jax.lax.scan(round_body, params, jnp.arange(num_rounds))
+        _, traj = jax.lax.scan(round_body, carry0, jnp.arange(num_rounds))
         return traj
 
     return trial
@@ -266,6 +316,16 @@ def _cluster_fields(out: tuple) -> dict:
             "cluster_assign": np.asarray(out[6])}
 
 
+def _split_telemetry(out):
+    """Split a trial fn's output into (trajectory tuple, telemetry dict or
+    None).  With metrics resolved the ys are ``(main, {name: series})``;
+    without, the plain trajectory tuple (len 4 or 7)."""
+    if isinstance(out, tuple) and len(out) == 2 and isinstance(out[1], dict):
+        main, tel = out
+        return main, {n: np.asarray(v) for n, v in tel.items()}
+    return out, None
+
+
 def _assert_budget_invariant(nsel, msum) -> None:
     """num_selected == mask.sum(): every mask-selected client was inside the
     gathered budget window and therefore actually trained."""
@@ -281,13 +341,15 @@ def simulate(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
              ds=None, seed: Optional[int] = None,
              avail: Optional[np.ndarray] = None,
              eval_n_per_class: int = 50,
-             workload: "str | Workload" = "cnn") -> GridResult:
+             workload: "str | Workload" = "cnn",
+             telemetry: Sequence[str] = ()) -> GridResult:
     """One FL trial through the compiled engine (host-loop-compatible knobs)."""
     import time
     name = strategy or fl_cfg.selection
     trial = make_trial_fn(fl_cfg, ds, aggregation=aggregation, rounds=rounds,
                           eval_n_per_class=eval_n_per_class,
-                          strategies=(name,), workload=workload)
+                          strategies=(name,), workload=workload,
+                          telemetry=telemetry)
     sid = jnp.int32(0)      # single-entry universe → direct call inside
     seed = fl_cfg.seed if seed is None else seed
     av = (jnp.asarray(avail, jnp.float32) if avail is not None
@@ -297,13 +359,15 @@ def simulate(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
     lowered = fn.lower(jnp.asarray(plan, jnp.int32), sid, jnp.int32(seed), av)
     compiled = lowered.compile()
     t1 = time.perf_counter()
+    record_memory_analysis("sim:trial", compiled)
     out = jax.block_until_ready(
         compiled(jnp.asarray(plan, jnp.int32), sid, jnp.int32(seed), av))
     t2 = time.perf_counter()
+    out, tel = _split_telemetry(out)
     acc, loss, nsel, msum = out[:4]
     _assert_budget_invariant(nsel, msum)
     return GridResult(np.asarray(acc), np.asarray(loss), np.asarray(nsel),
-                      wall_s=t2 - t1, compile_s=t1 - t0,
+                      wall_s=t2 - t1, compile_s=t1 - t0, telemetry=tel,
                       **_cluster_fields(out))
 
 
@@ -361,7 +425,8 @@ def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
                 ds=None,
                 avail: Optional[np.ndarray] = None,
                 eval_n_per_class: int = 50,
-                workload: "str | Workload" = "cnn") -> GridResult:
+                workload: "str | Workload" = "cnn",
+                telemetry: Sequence[str] = ()) -> GridResult:
     """Compiled grid primitive on raw device arrays (the "sim" engine body):
     vmap(trial) over seeds × strategies × cases, one lower+compile+launch.
     Prefer ``run_grid`` / ``experiment.run`` — this is their backend."""
@@ -377,7 +442,8 @@ def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
     strategies = tuple(strategies)
     trial = make_trial_fn(fl_cfg, ds, aggregation=aggregation, rounds=rounds,
                           eval_n_per_class=eval_n_per_class,
-                          strategies=strategies, workload=workload)
+                          strategies=strategies, workload=workload,
+                          telemetry=telemetry)
     # sids index the requested universe (the compiled program only contains
     # these strategies); position i of the output's strategy axis is
     # strategies[i].
@@ -399,12 +465,14 @@ def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
     t0 = time.perf_counter()
     compiled = fn.lower(*args).compile()
     t1 = time.perf_counter()
+    record_memory_analysis("sim:grid", compiled)
     out = jax.block_until_ready(compiled(*args))
     t2 = time.perf_counter()
+    out, tel = _split_telemetry(out)
     acc, loss, nsel, msum = out[:4]
     _assert_budget_invariant(nsel, msum)
     return GridResult(np.asarray(acc), np.asarray(loss), np.asarray(nsel),
-                      wall_s=t2 - t1, compile_s=t1 - t0,
+                      wall_s=t2 - t1, compile_s=t1 - t0, telemetry=tel,
                       **_cluster_fields(out))
 
 

@@ -1,0 +1,30 @@
+"""CLI for the observability subsystem.
+
+``python -m repro.obs report <result.json> [...]`` renders the telemetry
+envelope of one or more result / bench JSON files.  Always exits 0 on a
+readable file — the report is a diagnostic surface, not a gate (contrast
+``python -m repro.analysis``, which is the gate)."""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from repro.obs.report import report_file
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = p.add_subparsers(dest="cmd", required=True)
+    rep = sub.add_parser("report", help="render telemetry from result JSON")
+    rep.add_argument("paths", nargs="+", help="ExperimentResult/BENCH JSON")
+    args = p.parse_args(argv)
+
+    if args.cmd == "report":
+        for path in args.paths:
+            print(report_file(path))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

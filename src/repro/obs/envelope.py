@@ -1,0 +1,80 @@
+"""The versioned telemetry envelope carried in ``ExperimentResult.meta``.
+
+One schema replaces the divergent per-engine ``meta["sharded"]`` /
+``meta["population"]`` / ``meta["clustered"]`` shapes (kept as aliases):
+
+.. code-block:: python
+
+    meta["telemetry"] = {
+        "version": 1,
+        "engine": "sim",
+        "axes": ["scenario", "strategy", "seed", "round"],
+        "series": {                      # in-graph metric series
+            "selection_entropy": {
+                "axes": ["scenario", "strategy", "seed", "round"],
+                "data": [[[[...]]]],     # nested lists, exact JSON round-trip
+            },
+            "cluster_occupancy": {
+                "axes": [..., "cluster"],
+                "data": ...,
+            },
+        },
+        "engine_facts": {...},           # the old per-engine meta dict
+        "spans": {"compile": {"count": 2, "total_s": 1.3}, ...},
+        "memory_analysis": [{"label": "sim", "temp_size_in_bytes": ...}],
+    }
+
+``data`` holds plain nested lists of Python floats (f32 series), so
+``json.dumps`` → ``json.loads`` reproduces the envelope exactly —
+no dtype or precision surprises on the round trip.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.obs.registry import BASE_AXES, get_metric
+
+TELEMETRY_SCHEMA_VERSION = 1
+
+
+def build_envelope(engine: str, *,
+                   series: Optional[Mapping[str, np.ndarray]] = None,
+                   engine_facts: Optional[Mapping[str, Any]] = None,
+                   spans: Optional[Mapping[str, Any]] = None,
+                   memory_analysis: Optional[Sequence[Mapping[str, Any]]] = None,
+                   ) -> Dict[str, Any]:
+    """Assemble the versioned envelope from per-metric ``(K, S, R, rounds,
+    …)`` arrays.  Values are float64-cast to lists so the JSON round trip is
+    exact (f32 values survive the f32→f64→text→f64 path bit-exactly)."""
+    env: Dict[str, Any] = {
+        "version": TELEMETRY_SCHEMA_VERSION,
+        "engine": engine,
+        "axes": list(BASE_AXES),
+        "series": {},
+    }
+    for name, arr in (series or {}).items():
+        arr = np.asarray(arr)
+        try:
+            extra = get_metric(name).axes
+        except KeyError:
+            extra = tuple(f"dim{i}" for i in range(arr.ndim - len(BASE_AXES)))
+        env["series"][name] = {
+            "axes": list(BASE_AXES) + list(extra),
+            "data": arr.astype(np.float64).tolist(),
+        }
+    if engine_facts:
+        env["engine_facts"] = dict(engine_facts)
+    if spans:
+        env["spans"] = {k: dict(v) for k, v in dict(spans).items()}
+    if memory_analysis:
+        env["memory_analysis"] = [dict(m) for m in memory_analysis]
+    return env
+
+
+def series_arrays(envelope: Mapping[str, Any]) -> Dict[str, np.ndarray]:
+    """name → np.ndarray view of an envelope's series (the ``telemetry()``
+    accessor's backend)."""
+    return {name: np.asarray(s["data"], dtype=np.float64)
+            for name, s in envelope.get("series", {}).items()}

@@ -53,6 +53,19 @@ def _temp_workload(name, wl):
         _WORKLOADS.pop(name, None)
 
 
+@contextlib.contextmanager
+def _temp_metric(name, fn, **kw):
+    from repro.obs import register_metric
+    from repro.obs.registry import _METRIC_IDS, _METRICS
+    register_metric(name, fn, overwrite=True, **kw)
+    try:
+        yield
+    finally:
+        _METRICS.pop(name, None)
+        if name in _METRIC_IDS:
+            _METRIC_IDS.remove(name)
+
+
 def _spec(**kw):
     base = dict(scenarios=(ScenarioSpec.from_case("iid"),),
                 strategies=("labelwise",))
@@ -117,6 +130,28 @@ def _nonsep_strategy(key, hists, n_select=None):
     order = jnp.argsort(-scores).astype(jnp.int32)
     return SelectionResult(mask=mask, scores=scores, order=order,
                            budget=n_select)
+
+
+def _callback_metric(state):
+    """Forbidden: a host callback inside the traced metric body — would
+    host-sync every engine scan step."""
+    return jax.pure_callback(
+        lambda h: h.sum(), jax.ShapeDtypeStruct((), jnp.float32),
+        state["hists"])
+
+
+def _traced_bool_metric(state):
+    """Host-side concretization: branches on a traced truth value."""
+    if state["hists"].sum() > 0:
+        return state["hists"].sum()
+    return jnp.float32(0.0)
+
+
+def _oversized_metric(state):
+    """Output far beyond the scan-ys size budget: a trajectory, not a
+    metric."""
+    del state
+    return jnp.zeros((128, 64), jnp.float32)
 
 
 def _missing_hists_workload():
@@ -185,6 +220,61 @@ class TestSeededViolationsAtDeepValidate:
         with _temp_strategy("_an_bad_dtype", _bad_dtype_strategy):
             with pytest.raises(ContractError, match="A003"):
                 _spec(strategies=("_an_bad_dtype",)).validate(deep=True)
+
+
+class TestMetricContract:
+    """The A3xx pass over the repro.obs metric registry — the same three
+    surfaces as the other registry axes."""
+
+    def test_callback_metric_is_A005_at_deep_validate(self):
+        with _temp_metric("_an_cb_metric", _callback_metric,
+                          requires=("hists",)):
+            with pytest.raises(ContractError) as ei:
+                _spec(telemetry=("_an_cb_metric",)).validate(deep=True)
+            errs = [d for d in ei.value.diagnostics if d.severity == "error"]
+            assert any(d.code == "A005" and d.kind == "metric" and
+                       d.name == "_an_cb_metric" for d in errs)
+
+    def test_untraceable_metric_is_A301(self):
+        with _temp_metric("_an_bool_metric", _traced_bool_metric,
+                          requires=("hists",)):
+            with pytest.raises(ContractError) as ei:
+                _spec(telemetry=("_an_bool_metric",)).validate(deep=True)
+            errs = [d for d in ei.value.diagnostics if d.severity == "error"]
+            assert [d.code for d in errs] == ["A301"]
+            assert "concretizes" in errs[0].message
+
+    def test_oversized_metric_is_A302(self):
+        from repro.analysis import check_metric
+        with _temp_metric("_an_big_metric", _oversized_metric,
+                          axes=("a", "b")):
+            findings = check_metric("_an_big_metric")
+            assert [d.code for d in findings.errors()] == ["A302"]
+            assert findings.errors()[0].detail["size"] == 128 * 64
+
+    def test_axes_rank_mismatch_is_A302(self):
+        from repro.analysis import check_metric
+        with _temp_metric("_an_rank_metric", lambda s: s["mask"],
+                          requires=("mask",)):   # vector, no declared axes
+            findings = check_metric("_an_rank_metric")
+            assert any(d.code == "A302" and "rank" in d.message
+                       for d in findings.errors())
+
+    def test_check_true_blocks_broken_metric(self):
+        from repro.obs import register_metric, registered_metrics
+        with pytest.raises(ContractError):
+            register_metric("_an_reject_metric", _callback_metric,
+                            requires=("hists",), check=True)
+        assert "_an_reject_metric" not in registered_metrics()
+
+    def test_builtin_metrics_pass_check(self):
+        from repro.analysis import check_metric
+        from repro.obs import metrics_registry
+        for name, m in metrics_registry().items():
+            if name.startswith("_"):
+                continue
+            findings = check_metric(name, m)
+            assert not findings.errors(), (name, findings.render())
 
 
 class TestRegistrationTimeCheck:
