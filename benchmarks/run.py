@@ -31,6 +31,7 @@ SUITES = [
     ("sim_grid", "benchmarks.sim_grid"),
     ("workload_grid", "benchmarks.workload_grid"),
     ("clustered", "benchmarks.clustered"),
+    ("robust", "benchmarks.robust"),
     ("sharded_round", "benchmarks.sharded_round"),
     ("population", "benchmarks.population"),
     ("roofline_report", "benchmarks.roofline_report"),
@@ -61,6 +62,11 @@ def main(argv=None) -> int:
                          "models) vs single-model fedavg accuracy "
                          "comparison on the non-IID cases and emit "
                          "BENCH_clustered.json")
+    ap.add_argument("--robust", action="store_true",
+                    help="only run the byzantine-robustness grid (25% "
+                         "poisoned clients x {fedavg, median, trimmed_mean, "
+                         "krum} on the non-IID cases) and emit "
+                         "BENCH_robust.json")
     ap.add_argument("--population", action="store_true",
                     help="only run the population-scale suite (hier≡sim "
                          "micro parity, N-sweep 10³→10⁶ with per-shard "
@@ -77,6 +83,8 @@ def main(argv=None) -> int:
         args.only = "hotpath"
     if args.clustered:
         args.only = "clustered"
+    if args.robust:
+        args.only = "robust"
     if args.population:
         args.only = "population"
     if args.only and args.only not in {n for n, _ in SUITES}:

@@ -1,0 +1,61 @@
+"""Byzantine attack grid: robust aggregation rescuing a poisoned cohort.
+
+The adversary model is declared as data (``ExperimentSpec.adversary``): a
+deterministic 25% of clients report ``scale · Δ`` poisoned deltas every
+round, and the grid crosses that attack against the vanilla ``fedavg`` mean
+and the robust ``trimmed_mean`` / ``krum`` reducers (registry ids 7/8) on
+the majority-biased case1b split.  Expected shape of the table: under
+attack, fedavg collapses toward chance while the robust rows retain most of
+their clean accuracy — the reducers drop/outvote the expected one attacker
+among the 4 selected clients.
+
+The second half shows the detection side: the ``delta_outlier`` telemetry
+metric z-scores each selected client's as-reported update norm, and
+``repro.obs`` report flags clients whose z stays one-sided and large across
+rounds — the poisoned clients, by id.
+
+    PYTHONPATH=src python examples/robust_attack_grid.py
+"""
+import json
+
+from repro.configs.paper_cnn import FLConfig
+from repro.fl import ExperimentSpec, ScenarioSpec, run
+from repro.obs.report import render_report
+
+ATTACK = {"frac": 0.25, "behaviors": ("poison",), "scale": -4.0}
+
+
+def main():
+    cfg = FLConfig(num_clients=8, clients_per_round=4, global_epochs=6,
+                   local_epochs=1, batch_size=8, lr=1e-3)
+    scen = (ScenarioSpec.from_case("case1b", samples_per_client=8),)
+
+    print(f"{'aggregation':14s} {'clean_acc':>9s} {'attacked_acc':>12s}")
+    for agg in ("fedavg", "trimmed_mean", "krum"):
+        acc = {}
+        for label, adv in (("clean", {}), ("attacked", ATTACK)):
+            res = run(ExperimentSpec(
+                scenarios=scen, strategies=("labelwise",), seeds=(0,),
+                engine="sim", fl=cfg, aggregation=agg, adversary=adv,
+                eval_n_per_class=2))
+            acc[label] = float(res.final_accuracy.mean())
+        print(f"{agg:14s} {acc['clean']:9.4f} {acc['attacked']:12.4f}")
+
+    # Detection: re-run the attacked fedavg cell with telemetry on and let
+    # the report layer name the suspects.
+    spec = ExperimentSpec(
+        scenarios=scen, strategies=("labelwise",), seeds=(0,), engine="sim",
+        fl=cfg, adversary=ATTACK, telemetry=("delta_outlier",),
+        eval_n_per_class=2)
+    res = run(spec)
+    mask = spec.adversary_masks()[0]
+    print(f"\nadversary mask (seeded, engine-independent): "
+          f"clients {sorted(int(i) for i in mask.nonzero()[0])}")
+    report = render_report(json.loads(res.to_json()))
+    for line in report.splitlines():
+        if "byzantine" in line or line.startswith("  health"):
+            print(line.strip())
+
+
+if __name__ == "__main__":
+    main()

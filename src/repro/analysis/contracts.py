@@ -383,6 +383,8 @@ def _metric_state(num_clients: int, num_classes: int, n_clusters: int,
         "assign": jax.ShapeDtypeStruct((num_clients,), jnp.int32),
         "centroids": cent, "prev_centroids": cent,
         "staleness_delays": jax.ShapeDtypeStruct((buffer_k,), jnp.int32),
+        "client_update_norms": jax.ShapeDtypeStruct((num_clients,),
+                                                    jnp.float32),
     }
     return dyn
 

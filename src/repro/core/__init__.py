@@ -17,13 +17,16 @@ from .selection import (SelectionResult, STRATEGIES, BUILTIN_STRATEGIES,
                         select_labelwise_priority)
 from .noniid import (CASES, case_label_plan, bias_mix_plan, dirichlet_plan,
                      plan_round, availability_plan, apply_availability,
-                     quantity_skew, SAMPLES_PER_CLIENT, MAJORITY_PER_CLIENT,
+                     quantity_skew, adversary_mask, flip_labels,
+                     SAMPLES_PER_CLIENT, MAJORITY_PER_CLIENT,
                      MINORITY_PER_CLIENT)
 from .aggregation import (masked_mean, fedavg_aggregate, fedsgd_aggregate,
                           interpolate, psum_aggregate, all_gather_scores,
                           gather_client_shards, exchange_selected_shards,
                           psum_weighted_mean, block_partial_sums,
                           two_tier_weighted_mean,
+                          median_reduce, make_trimmed_mean, make_krum,
+                          trimmed_mean_reduce, krum_reduce,
                           Aggregator, AGGREGATORS, BUILTIN_AGGREGATORS,
                           register_aggregator, registered_aggregators,
                           aggregator_id, get_aggregator)

@@ -220,6 +220,121 @@ register_aggregator("clustered_fedavg8", Aggregator("fedavg", n_clusters=8))
 
 
 # ---------------------------------------------------------------------------
+# Robust (byzantine-tolerant) reductions — registered through the designed
+# ``Aggregator.reduce`` slot with ZERO engine edits.  All three are pure
+# traced JAX over the stacked (S, ...) client axis with a DYNAMIC live count
+# (c = Σ live is a traced scalar — the same reduce compiles for any selection
+# budget), and all three deliberately IGNORE the n_i ``sizes`` weights: a
+# byzantine client reports its own n_i, so any size-weighted robust statistic
+# hands the attacker its breakdown point back.  Each is translation/scale
+# equivariant, so reducing trained params ≡ reducing deltas + interpolate —
+# the algebra the sharded gather-reduce parity rests on.
+# ---------------------------------------------------------------------------
+
+def median_reduce(stacked: PyTree, live: Array,
+                  sizes: Array | None = None) -> PyTree:
+    """Coordinate-wise median over the live clients (sizes ignored — see
+    the robust-reduction note above).
+
+    Dead slots sort to +inf past the c live values; the median of c values
+    averages the floor/ceil((c−1)/2) ranks, handling even counts exactly.
+    c=0 produces +inf coordinates — every engine's count=0 ``any_live``
+    guard discards the round, so the values never land."""
+    del sizes
+    c = jnp.maximum(live.astype(jnp.int32).sum(), 1)
+    lo, hi = (c - 1) // 2, c // 2
+
+    def med(p: Array) -> Array:
+        x = jnp.where(_bcast(live, p) > 0, p.astype(jnp.float32), jnp.inf)
+        x = jnp.sort(x, axis=0)
+        pair = jnp.take(x, lo, axis=0) + jnp.take(x, hi, axis=0)
+        return (0.5 * pair).astype(p.dtype)
+
+    return jax.tree_util.tree_map(med, stacked)
+
+
+def make_trimmed_mean(trim_frac: float = 0.25) -> AggregateFn:
+    """Coordinate-wise ``trim_frac``-trimmed mean: per coordinate, sort the
+    c live values, drop the k = ⌊trim_frac·c⌋ smallest and largest, and
+    average the middle c−2k (uniformly — sizes ignored, see the note above).
+    Tolerates up to ⌊trim_frac·c⌋ byzantine clients per coordinate."""
+    if not 0.0 <= trim_frac < 0.5:
+        raise ValueError(f"trim_frac must be in [0, 0.5); got {trim_frac}")
+
+    def reduce(stacked: PyTree, live: Array,
+               sizes: Array | None = None) -> PyTree:
+        del sizes
+        c = live.astype(jnp.int32).sum()
+        k = (jnp.float32(trim_frac) * c.astype(jnp.float32)).astype(jnp.int32)
+        denom = jnp.maximum(c - 2 * k, 1).astype(jnp.float32)
+
+        def trim(p: Array) -> Array:
+            x = jnp.where(_bcast(live, p) > 0, p.astype(jnp.float32), jnp.inf)
+            x = jnp.sort(x, axis=0)
+            r = jnp.arange(x.shape[0])
+            keep = (r >= k) & (r < c - k)
+            keep = keep.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+            return (jnp.where(keep, x, 0.0).sum(axis=0) / denom).astype(
+                p.dtype)
+
+        return jax.tree_util.tree_map(trim, stacked)
+
+    return reduce
+
+
+def make_krum(byzantine_frac: float = 0.25) -> AggregateFn:
+    """Krum (Blanchard et al. 2017): select the single client update whose
+    summed squared distance to its m = c−f−2 nearest live neighbours is
+    smallest (f = ⌊byzantine_frac·c⌋ assumed attackers), and return that
+    client's whole tree — a geometric-consensus pick rather than a mean, so
+    a colluding minority can never shift the result off an honest update."""
+    if not 0.0 <= byzantine_frac < 0.5:
+        raise ValueError(
+            f"byzantine_frac must be in [0, 0.5); got {byzantine_frac}")
+    # Finite sentinels (not +inf): excluded pairs must stay summable so the
+    # c=1 round still scores its lone live client below every dead slot.
+    _EXCL, _DEAD = 1e30, 1e35
+
+    def reduce(stacked: PyTree, live: Array,
+               sizes: Array | None = None) -> PyTree:
+        del sizes
+        lv = live.astype(jnp.float32)
+        c = lv.astype(jnp.int32).sum()
+        f = (jnp.float32(byzantine_frac) * c.astype(jnp.float32)).astype(
+            jnp.int32)
+        leaves = jax.tree_util.tree_leaves(stacked)
+        s = leaves[0].shape[0]
+        flat = jnp.concatenate(
+            [leaf.astype(jnp.float32).reshape(s, -1) for leaf in leaves],
+            axis=1)
+        sq = jnp.sum(flat * flat, axis=1)
+        d2 = sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T)
+        excl = (jnp.eye(s, dtype=bool) | (lv[None, :] == 0))
+        d2 = jnp.where(excl, _EXCL, jnp.maximum(d2, 0.0))
+        # sum of the m smallest neighbour distances per row (m traced)
+        m = jnp.clip(c - f - 2, 1, s - 1)
+        d2 = jnp.sort(d2, axis=1)
+        score = jnp.where(jnp.arange(s)[None, :] < m, d2, 0.0).sum(axis=1)
+        sel = jnp.argmin(score + (1.0 - lv) * _DEAD)
+        return jax.tree_util.tree_map(
+            lambda p: jnp.take(p, sel, axis=0), stacked)
+
+    return reduce
+
+
+trimmed_mean_reduce = make_trimmed_mean()
+krum_reduce = make_krum()
+
+# Robust builtins (ids 6/7/8, appended after the clustered sweep block):
+# fedavg-based families whose server reduction is the robust statistic —
+# the byzantine-tolerance axis of the benchmarks' robustness grid.
+register_aggregator("median", Aggregator("fedavg", reduce=median_reduce))
+register_aggregator("trimmed_mean",
+                    Aggregator("fedavg", reduce=trimmed_mean_reduce))
+register_aggregator("krum", Aggregator("fedavg", reduce=krum_reduce))
+
+
+# ---------------------------------------------------------------------------
 # Two-tier (hierarchical) reduction — the population-scale aggregation rule.
 # ---------------------------------------------------------------------------
 

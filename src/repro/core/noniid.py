@@ -174,6 +174,40 @@ def apply_availability(plan: np.ndarray, avail: np.ndarray) -> np.ndarray:
     return np.where(avail[..., None], plan, np.int32(-1)).astype(np.int32)
 
 
+def adversary_mask(seed: int, num_clients: int, frac: float) -> np.ndarray:
+    """(N,) float32 0/1 byzantine-client mask: ``round(frac·N)`` clients drawn
+    without replacement are adversarial for the WHOLE run.
+
+    Static across rounds (a compromised device stays compromised — the
+    standard byzantine model, and what makes krum/trimmed-mean guarantees
+    apply), deterministic from ``seed``.  The engines thread this exactly
+    like the availability mask; ``frac=0`` is the all-honest identity."""
+    if not 0.0 <= frac <= 1.0:
+        raise ValueError(f"adversary frac must be in [0, 1]; got {frac}")
+    rng = np.random.default_rng(seed)
+    mask = np.zeros(num_clients, dtype=np.float32)
+    n_adv = int(round(frac * num_clients))
+    if n_adv:
+        mask[rng.choice(num_clients, size=n_adv, replace=False)] = 1.0
+    return mask
+
+
+def flip_labels(plan: np.ndarray, adv: np.ndarray,
+                num_classes: int = 10) -> np.ndarray:
+    """Label-flip attack over a plan: adversarial clients' labels ℓ become
+    C−1−ℓ (the standard inversion flip — classes map to their mirror, so the
+    poisoned gradient points *against* the honest one instead of averaging
+    out the way a uniform random relabel would).
+
+    ``adv`` is the (N,) 0/1 mask from :func:`adversary_mask`; −1 ragged
+    padding is untouched, honest clients pass through bit-identically."""
+    if plan.ndim != 3 or adv.shape != (plan.shape[1],):
+        raise ValueError(f"need plan (T, N, n) and adv (N,); got "
+                         f"{plan.shape} and {adv.shape}")
+    flip = (adv > 0)[None, :, None] & (plan >= 0)
+    return np.where(flip, num_classes - 1 - plan, plan).astype(np.int32)
+
+
 def quantity_skew(plan: np.ndarray, seed: int, n_min: int = 30,
                   n_max: int | None = None) -> np.ndarray:
     """Ragged per-client sample counts n_ti ~ U(n_min, n_max) over any plan.

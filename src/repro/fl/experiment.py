@@ -64,10 +64,10 @@ import numpy as np
 
 from repro.configs.paper_cnn import FLConfig
 from repro.core import (CASES, SAMPLES_PER_CLIENT, SelectionResult, STRATEGIES,
-                        apply_availability, availability_plan, bias_mix_plan,
-                        case_label_plan, dirichlet_plan, get_aggregator,
-                        get_strategy, quantity_skew, register_strategy,
-                        topn_mask)
+                        adversary_mask, apply_availability, availability_plan,
+                        bias_mix_plan, case_label_plan, dirichlet_plan,
+                        flip_labels, get_aggregator, get_strategy,
+                        quantity_skew, register_strategy, topn_mask)
 
 # ---------------------------------------------------------------------------
 # Transform registry: kind -> lowering fn(plan, avail, seed, **params)
@@ -125,8 +125,24 @@ def _lower_quantity_skew(plan: np.ndarray, avail: Optional[np.ndarray],
     return quantity_skew(plan, seed, n_min=n_min, n_max=n_max), avail
 
 
+def _lower_label_flip(plan: np.ndarray, avail: Optional[np.ndarray],
+                      seed: int, *, frac: float, num_classes: int = 10,
+                      rounds: int):
+    """Plan-level byzantine label poisoning: a fixed ``adversary_mask(frac)``
+    client subset reports the inverted label ℓ → C−1−ℓ for every sample in
+    every round (−1 padding untouched).  Purely a data transform, so it
+    composes with availability/quantity_skew in stack order and runs
+    identically on every engine — the adversary subset is drawn from the
+    scenario's deterministic transform seed schedule unless the spec pins an
+    explicit ``seed``."""
+    del rounds
+    adv = adversary_mask(seed, plan.shape[1], frac)
+    return flip_labels(plan, adv, num_classes=num_classes), avail
+
+
 register_transform("availability", _lower_availability)
 register_transform("quantity_skew", _lower_quantity_skew)
+register_transform("label_flip", _lower_label_flip)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -160,6 +176,11 @@ def quantity(n_min: int = 30, n_max: Optional[int] = None,
                          {"n_min": n_min, "n_max": n_max, **params})
 
 
+def label_flip(frac: float, **params: Any) -> TransformSpec:
+    """Sugar: TransformSpec("label_flip", frac=...)."""
+    return TransformSpec("label_flip", {"frac": frac, **params})
+
+
 # ---------------------------------------------------------------------------
 # Scenario specs
 # ---------------------------------------------------------------------------
@@ -169,6 +190,22 @@ _SOURCES = ("case", "bias_mix", "dirichlet", "plan")
 # Stride between consecutive transforms' derived seeds (any prime far from
 # the fold_in constants the engines use keeps the streams disjoint).
 _TRANSFORM_SEED_STRIDE = 7919
+
+# Offset for the spec-level adversary mask's derived seed (per experiment
+# seed s the mask seed is s + stride) — a different prime keeps the byzantine
+# draw disjoint from both the transform streams and the engines' fold_ins.
+_ADVERSARY_SEED_STRIDE = 104729
+
+# The ExperimentSpec.adversary dict's accepted keys (see the field docstring).
+_ADVERSARY_KEYS = frozenset({"frac", "behaviors", "scale", "tau", "seed"})
+
+
+def _jsonable_adversary(adv: Mapping[str, Any]) -> Dict[str, Any]:
+    """JSON-able copy of an adversary dict (behaviors tuple → list)."""
+    out = dict(adv)
+    if "behaviors" in out:
+        out["behaviors"] = list(out["behaviors"])
+    return out
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -399,6 +436,16 @@ class ExperimentSpec:
     # to the REPRO_TELEMETRY env var; with neither set the engines compile
     # the identical telemetry-free program (trajectories are bit-identical).
     telemetry: Tuple[str, ...] = ()
+    # Engine-level byzantine adversary (JSON-able; empty = off, compiling the
+    # identical pre-adversary program).  Keys: ``frac`` — byzantine client
+    # fraction (adversary_mask draw); ``behaviors`` — subset of
+    # {"poison", "stale_update"} (the plan-level label_flip attack is a
+    # scenario TRANSFORM, not a behavior); ``scale`` — poison delta
+    # multiplier (default −1.0, sign-flip); ``tau`` — stale_update staleness
+    # in rounds (default 1); ``seed`` — pin one mask across all experiment
+    # seeds (default: per-seed masks from s + _ADVERSARY_SEED_STRIDE).
+    # Supported on sim/host/sharded with single-global-model families.
+    adversary: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def num_rounds(self) -> int:
@@ -444,7 +491,37 @@ class ExperimentSpec:
                     f"{sorted(accepted) or '(no options)'}")
         # Unknown aggregation families raise here, pre-compile — the same
         # fail-fast contract as strategies/engines/workloads.
-        get_aggregator(self.aggregation or self.fl.aggregation)
+        agg = get_aggregator(self.aggregation or self.fl.aggregation)
+        if self.adversary:
+            unknown = sorted(set(self.adversary) - _ADVERSARY_KEYS)
+            if unknown:
+                raise ValueError(
+                    f"unknown adversary key(s) {unknown}; have "
+                    f"{sorted(_ADVERSARY_KEYS)}")
+            frac = float(self.adversary.get("frac", 0.0))
+            if not 0.0 <= frac <= 1.0:
+                raise ValueError(
+                    f"adversary frac must be in [0, 1]; got {frac}")
+            from .round import resolve_adversary
+            poison_scale, tau = resolve_adversary(self.adversary)
+            if poison_scale is not None or tau > 0:
+                if agg.clustered:
+                    raise ValueError(
+                        "engine-level adversary behaviors (poison/"
+                        "stale_update) are not defined for clustered "
+                        "aggregation families; use the plan-level label_flip "
+                        "transform or a single-global-model aggregator")
+                if tau > 0 and agg.base == "fedsgd":
+                    raise ValueError(
+                        "stale_update needs a stale TRAINING base; the "
+                        "fedsgd family reports one gradient at the current "
+                        "global, so the behavior is undefined for it")
+                if self.engine in ("hier", "async"):
+                    raise ValueError(
+                        f"engine {self.engine!r} does not support "
+                        "engine-level adversary behaviors (poison/"
+                        "stale_update); run on sim/host/sharded, or attack "
+                        "the plan with the label_flip transform")
         from .workloads import get_workload
         get_workload(self.workload)  # unknown workloads raise pre-compile
         from repro.obs import get_metric
@@ -457,6 +534,23 @@ class ExperimentSpec:
             if findings.errors():
                 raise ContractError(findings)
 
+    def adversary_masks(self) -> Optional[np.ndarray]:
+        """The (R, N) per-seed 0/1 byzantine masks this spec's adversary
+        draws — the SAME schedule on every engine, so an attacked run is as
+        reproducible as a clean one.  Experiment seed ``seeds[i]`` gets mask
+        seed ``seeds[i] + _ADVERSARY_SEED_STRIDE`` unless the adversary dict
+        pins an explicit ``seed`` (then every row is that one draw).  None
+        when the spec has no adversary."""
+        if not self.adversary:
+            return None
+        frac = float(self.adversary.get("frac", 0.0))
+        base = self.adversary.get("seed")
+        return np.stack([
+            adversary_mask(int(base) if base is not None
+                           else int(s) + _ADVERSARY_SEED_STRIDE,
+                           self.fl.num_clients, frac)
+            for s in self.seeds])
+
     def to_dict(self) -> Dict[str, Any]:
         return {
             "scenarios": [s.to_dict() for s in self.scenarios],
@@ -467,6 +561,7 @@ class ExperimentSpec:
             "workload": self.workload,
             "engine_options": dict(self.engine_options),
             "telemetry": list(self.telemetry),
+            "adversary": _jsonable_adversary(self.adversary),
         }
 
     @classmethod
@@ -481,7 +576,8 @@ class ExperimentSpec:
             eval_n_per_class=d.get("eval_n_per_class", 50),
             workload=d.get("workload", "cnn"),
             engine_options=dict(d.get("engine_options", {})),
-            telemetry=tuple(d.get("telemetry", ())))
+            telemetry=tuple(d.get("telemetry", ())),
+            adversary=dict(d.get("adversary") or {}))
 
 
 @dataclasses.dataclass
@@ -735,7 +831,9 @@ def _engine_sim(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
                       seeds=spec.seeds, aggregation=spec.aggregation,
                       rounds=spec.rounds, ds=ds, avail=avail,
                       eval_n_per_class=spec.eval_n_per_class,
-                      workload=spec.workload, telemetry=spec.telemetry)
+                      workload=spec.workload, telemetry=spec.telemetry,
+                      adversary=spec.adversary or None,
+                      adv=spec.adversary_masks())
     meta: Dict[str, Any] = {}
     if res.cluster_accuracy is not None:
         meta.update(_clustered_meta(res.cluster_accuracy, res.cluster_loss,
@@ -755,6 +853,7 @@ def _engine_host(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
     """Legacy per-round host loop over every grid cell — the parity oracle."""
     from .loop import run_fl_host
     agg = get_aggregator(spec.aggregation or spec.fl.aggregation)
+    adv_masks = spec.adversary_masks()
     k_n, s_n, r_n = len(lowered), len(spec.strategies), len(spec.seeds)
     t_n = spec.num_rounds
     acc = np.zeros((k_n, s_n, r_n, t_n), np.float32)
@@ -778,7 +877,10 @@ def _engine_host(spec: ExperimentSpec, lowered: Sequence[LoweredScenario], ds):
                                 rounds=spec.rounds, ds=ds, seed=seed,
                                 eval_n_per_class=spec.eval_n_per_class,
                                 workload=spec.workload,
-                                telemetry=spec.telemetry)
+                                telemetry=spec.telemetry,
+                                adversary=spec.adversary or None,
+                                adv=None if adv_masks is None
+                                else adv_masks[r])
                 compile_s += h.compile_s
                 acc[k, s, r] = h.accuracy
                 loss[k, s, r] = h.loss
@@ -814,8 +916,15 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     Any registered strategy and any registered ``base`` aggregation family —
     fedavg/fedsgd and their clustered multi-global-model forms — are
     supported (each strategy compiles its own round with its own static
-    budget; a custom ``Aggregator.reduce`` override is not, because this
-    round aggregates through the weighted delta-psum collective).  Clients are
+    budget).  A registered ``Aggregator.reduce`` override (the robust
+    median/trimmed_mean/krum builtins) switches the scatter phase from the
+    weighted delta-psum collective to the gather-reduce form: the B_pad
+    selected deltas are all-gathered and the reduction runs replicated on
+    every shard (see ``make_sharded_fl_round``'s ``reduce_fn``); clustered
+    families keep the per-cluster psum pair and reject overrides.  The
+    spec-level adversary (``poison``/``stale_update`` + the per-seed
+    byzantine masks) threads through the same round arguments the host loop
+    uses, so attacked sharded runs stay parity-pinned.  Clients are
     distributed over the mesh in equal blocks: the client axis takes the
     largest device count dividing ``fl.num_clients`` (one client per slice
     when there are enough devices; emulate more with
@@ -833,6 +942,7 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
     ``REPRO_SHARDED_EXCHANGE=allgather`` to measure the O(N) path.  The
     chosen exchange is reported in ``meta["sharded"]["exchange"]``."""
     import os
+    from collections import deque
 
     import jax
     import jax.numpy as jnp
@@ -843,17 +953,15 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
                            resolve_telemetry_request)
     from repro.optim import get_optimizer
     from .client import local_gradient, local_train
-    from .round import stack_global_params
+    from .round import resolve_adversary, stack_global_params
     from .sharded import exchange_bytes_per_device, make_sharded_fl_round
     from .workloads import get_workload
 
     cfg = spec.fl
     agg = get_aggregator(spec.aggregation or cfg.aggregation)
-    if agg.reduce is not None:
-        raise ValueError(
-            "engine='sharded' aggregates through the weighted delta-psum "
-            "collective; a custom Aggregator.reduce override is not "
-            "supported — run it on engine='sim' or 'host'")
+    poison_scale, tau = resolve_adversary(spec.adversary)
+    attacked = poison_scale is not None or tau > 0
+    adv_masks = spec.adversary_masks() if attacked else None
     n_clients = cfg.num_clients
     ndev = jax.device_count()
     groups = (n_clients if ndev >= n_clients else
@@ -916,7 +1024,8 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
             batch_pspec={k: P() for k in wl.batch_keys},
             num_clients=n_clients, strategy=strat, server_lr=server_lr,
             exchange=exchange, n_clusters=agg.n_clusters,
-            kmeans_iters=agg.kmeans_iters)
+            kmeans_iters=agg.kmeans_iters, reduce_fn=agg.reduce,
+            poison_scale=poison_scale, with_stale=tau > 0)
         for strat in spec.strategies}
     avail_keys = ["hists", "mask", "num_classes", "params_old", "params_new"]
     if agg.clustered:
@@ -939,6 +1048,11 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
                 init = stack_global_params(init, agg.n_clusters)
             params = {strat: init for strat in spec.strategies}
             prev_cent = {strat: None for strat in spec.strategies}
+            adv_dev = (jnp.asarray(adv_masks[r], jnp.float32)
+                       if attacked else None)
+            # stale_update window: past[strat][0] is θ_{t−τ} (θ₀ early).
+            past = ({strat: deque([init], maxlen=tau + 1)
+                     for strat in spec.strategies} if tau else None)
             for t in range(t_n):
                 # Round data and keys depend only on (scenario, seed, round)
                 # — materialize once and step every strategy's own params.
@@ -955,9 +1069,15 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
                 k_sel = jax.random.fold_in(kt, 1)
                 for s, strat in enumerate(spec.strategies):
                     params_old = params[strat]
-                    params[strat], info = round_fns[strat](
-                        params[strat], batches, data["labels"],
-                        data["valid"], k_sel)
+                    args = (params[strat], batches, data["labels"],
+                            data["valid"], k_sel)
+                    if attacked:
+                        args += (adv_dev,)
+                    if tau:
+                        args += (past[strat][0],)
+                    params[strat], info = round_fns[strat](*args)
+                    if tau:
+                        past[strat].append(params[strat])
                     if collector is not None:
                         dyn = {"hists": data["hists"], "mask": info["mask"],
                                "params_old": params_old,
@@ -995,6 +1115,7 @@ def _engine_sharded(spec: ExperimentSpec, lowered: Sequence[LoweredScenario],
         "groups": groups, "clients": n_clients,
         "clients_per_group": n_clients // groups, "exchange": exchange,
         "n_clusters": agg.n_clusters,
+        "reduce": "gather" if agg.reduce is not None else "psum",
         "strategies": {
             strat: {"budget": fn.budget,
                     "trained_per_round": fn.trained_per_round,

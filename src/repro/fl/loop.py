@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -28,7 +29,8 @@ from repro.core import plan_round
 from repro.data import client_batches
 from repro.obs import (make_collector, record_memory_analysis, resolve_metrics,
                        resolve_telemetry_request, span)
-from .round import make_fl_round, resolve_aggregator, stack_global_params
+from .round import (make_fl_round, resolve_adversary, resolve_aggregator,
+                    stack_global_params)
 from .workloads import Workload, get_workload
 
 Array = jax.Array
@@ -116,7 +118,9 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
                 ds=None, seed: Optional[int] = None,
                 verbose: bool = False, eval_n_per_class: int = 50,
                 workload: "str | Workload" = "cnn",
-                telemetry: Sequence[str] = ()) -> FLHistory:
+                telemetry: Sequence[str] = (),
+                adversary: Optional[dict] = None,
+                adv: Optional[np.ndarray] = None) -> FLHistory:
     """Legacy host-driven loop: one jitted round per step, eval on host.
 
     The parity oracle generalizes over the same workload registry as the
@@ -127,7 +131,13 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
     ``wall_s`` excludes it (the engines' wall-clock numbers are comparable).
     ``telemetry`` names registered round metrics (or ``("auto",)``) evaluated
     on the round's device arrays; the series land in
-    ``FLHistory.telemetry[name]`` as (rounds, …) stacks."""
+    ``FLHistory.telemetry[name]`` as (rounds, …) stacks.
+
+    ``adversary`` + ``adv`` (the (N,) byzantine mask) enable the engine-level
+    attack behaviors, matching the compiled engine exactly
+    (repro.fl.sim.make_trial_fn): byzantine clients poison their reported
+    deltas and/or train from a τ-rounds-old global kept in a host-side
+    window — the oracle half of the attacked-run host≡sim parity pins."""
     wl = get_workload(workload)
     ds = wl.dataset(ds)
     seed = fl_cfg.seed if seed is None else seed
@@ -135,11 +145,28 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
     # history), not a request for the full schedule.
     rounds = fl_cfg.global_epochs if rounds is None else rounds
     agg = resolve_aggregator(aggregation, fl_cfg)
+    poison_scale, tau = resolve_adversary(adversary)
+    attacked = poison_scale is not None or tau > 0
+    if attacked and adv is None:
+        raise ValueError("adversary behaviors requested but no (N,) adv "
+                         "byzantine mask passed")
     key = jax.random.PRNGKey(seed)
     params = wl.init(jax.random.fold_in(key, 1), ds)
     if agg.clustered:
         params = stack_global_params(params, agg.n_clusters)
-    fl_round = make_fl_round(wl.make_loss(ds), fl_cfg, strategy, agg)
+    # Metrics resolve BEFORE the round builds: the delta_outlier series needs
+    # the round to compute per-client update norms (a round-shape static).
+    avail_keys = ["hists", "mask", "num_classes", "params_old", "params_new"]
+    if agg.clustered:
+        avail_keys += ["assign", "n_clusters", "centroids", "prev_centroids"]
+    else:
+        avail_keys += ["client_update_norms"]
+    metrics = resolve_metrics(resolve_telemetry_request(telemetry), avail_keys)
+    needs_norms = not agg.clustered and any(
+        "client_update_norms" in m.requires for m in metrics)
+    fl_round = make_fl_round(wl.make_loss(ds), fl_cfg, strategy, agg,
+                             poison_scale=poison_scale, with_stale=tau > 0,
+                             want_client_norms=needs_norms)
     eval_batch = wl.eval_set(ds, eval_n_per_class)
     eval_fn = wl.make_eval(ds)
     if agg.clustered:
@@ -156,16 +183,16 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
     else:
         eval_jit = jax.jit(lambda p: eval_fn(p, eval_batch))
 
-    avail_keys = ["hists", "mask", "num_classes", "params_old", "params_new"]
-    if agg.clustered:
-        avail_keys += ["assign", "n_clusters", "centroids", "prev_centroids"]
-    metrics = resolve_metrics(resolve_telemetry_request(telemetry), avail_keys)
-
     hist_acc, hist_loss, hist_sel = [], [], []
     c_acc, c_loss, c_assign = [], [], []
     tel: Dict[str, List[np.ndarray]] = {}
     compile_s = 0.0
     round_exec = eval_exec = collector = prev_cent = None
+    adv_dev = jnp.asarray(adv, jnp.float32) if attacked else None
+    # stale_update window: θ_{t−τ}..θ_t, so [0] is the byzantine training
+    # base (θ₀ while the run is younger than τ) — the host-side mirror of
+    # the compiled engine's scan-carried ring.
+    past = deque([params], maxlen=tau + 1) if tau else None
     t0 = time.time()
     for t in range(rounds):
         kt = jax.random.fold_in(key, 1000 + t)
@@ -173,16 +200,22 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
                               jax.random.fold_in(kt, 0))
         batches = client_batches(data, fl_cfg.batch_size, wl.batch_keys)
         key_t = jax.random.fold_in(kt, 1)
+        extra_args = ()
+        if attacked:
+            extra_args = (adv_dev, past[0] if tau else None)
         if round_exec is None:
             # AOT-compile once so compile_s is accounted (not folded into
             # wall_s) — round shapes are static across rounds.
             with span("compile", engine="host", what="round") as sp:
                 round_exec = fl_round.lower(params, batches, data["hists"],
-                                            key_t).compile()
+                                            key_t, *extra_args).compile()
             compile_s += sp.duration_s
             record_memory_analysis("host:round", round_exec)
         params_old = params
-        params, info = round_exec(params, batches, data["hists"], key_t)
+        params, info = round_exec(params, batches, data["hists"], key_t,
+                                  *extra_args)
+        if tau:
+            past.append(params)
         if agg.clustered:
             if eval_exec is None:
                 with span("compile", engine="host", what="eval") as sp:
@@ -213,6 +246,8 @@ def run_fl_host(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
                     prev_cent = jnp.zeros_like(info["cluster_centroids"])
             dyn = {"hists": data["hists"], "mask": info["mask"],
                    "params_old": params_old, "params_new": params}
+            if needs_norms:
+                dyn["client_update_norms"] = info["client_update_norms"]
             if agg.clustered:
                 dyn.update(assign=info["cluster_assign"],
                            centroids=info["cluster_centroids"],

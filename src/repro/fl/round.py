@@ -46,6 +46,32 @@ def resolve_aggregator(agg: "str | Aggregator | None", fl_cfg) -> Aggregator:
     return get_aggregator(agg or fl_cfg.aggregation)
 
 
+def resolve_adversary(adversary: "dict | None"):
+    """Normalize an adversary behavior dict into the engines' trace-time
+    statics ``(poison_scale, tau)``.
+
+    ``adversary`` keys (all optional): ``behaviors`` — a subset of
+    ``{"poison", "stale_update"}`` (empty → no engine-level behavior; the
+    plan-level ``label_flip`` attack rides the transform stack instead);
+    ``scale`` — the poison delta multiplier (default −1.0, the sign-flip
+    attack); ``tau`` — how many rounds stale a ``stale_update`` client's
+    training base is (default 1).  Returns ``(None, 0)`` for no/empty
+    adversary — the value every engine treats as compile-the-old-program."""
+    cfg = dict(adversary or {})
+    behaviors = tuple(cfg.get("behaviors", ()))
+    unknown = set(behaviors) - {"poison", "stale_update"}
+    if unknown:
+        raise ValueError(f"unknown adversary behaviors {sorted(unknown)}; "
+                         "have ['poison', 'stale_update'] (label_flip is a "
+                         "plan-level transform, not an engine behavior)")
+    poison_scale = (float(cfg.get("scale", -1.0))
+                    if "poison" in behaviors else None)
+    tau = int(cfg.get("tau", 1)) if "stale_update" in behaviors else 0
+    if tau < 0:
+        raise ValueError(f"adversary tau must be >= 0; got {tau}")
+    return poison_scale, tau
+
+
 def _reduce_fn(agg: Aggregator):
     """The family's masked weighted reduction: a registered override, or the
     backend compute dispatch (resolved HERE, not in repro.core.aggregation —
@@ -63,9 +89,18 @@ def stack_global_params(params: PyTree, n_clusters: int) -> PyTree:
         lambda p: jnp.broadcast_to(p[None], (n_clusters,) + p.shape), params)
 
 
+def _slot_bcast(v: Array, leaf: Array) -> Array:
+    """Broadcast a (S,) per-slot vector against a (S, ...) stacked leaf."""
+    return v.reshape(v.shape + (1,) * (leaf.ndim - 1))
+
+
 def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
                        live: Array, loss_fn, opt, fl_cfg,
-                       agg_kind: "str | Aggregator"
+                       agg_kind: "str | Aggregator", *,
+                       adv: Array | None = None,
+                       poison_scale: float | None = None,
+                       stale_params: PyTree | None = None,
+                       want_client_norms: bool = False
                        ) -> Tuple[PyTree, Dict[str, Array]]:
     """Local training + masked aggregation + server update for the selected
     client subset — the round math shared verbatim by the jitted host round
@@ -85,6 +120,21 @@ def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
     the fused Pallas weighted-agg kernel on TPU, ``masked_mean`` — the
     parity-pinned reference — on CPU; a registered ``reduce`` override
     (robust aggregation) slots in here without engine edits.
+
+    Adversary hooks (all default-off — the defaults compile the EXACT
+    pre-adversary program, the bit-identity every parity pin rests on):
+
+    * ``adv`` — (n_sel,) 0/1 per-slot byzantine mask (``adversary_mask``
+      gathered through ``order[:budget]``); required by the two behaviors.
+    * ``poison_scale`` — byzantine slots report ``base + scale·(θ' − base)``
+      instead of θ' (``scale=−1`` is the sign-flip attack; fedsgd scales the
+      reported gradient, the same statement with base ≡ 0).
+    * ``stale_params`` — byzantine slots run local training from this
+      τ-rounds-old global tree instead of the current one (the stale_update
+      systems fault; honest slots always train from ``global_params``).
+    * ``want_client_norms`` — adds ``m["update_norm"]``, the (n_sel,) ℓ₂
+      norm of each slot's AS-REPORTED update (post-poison — the
+      attack-visible signal the delta_outlier telemetry metric consumes).
     """
     agg = resolve_aggregator(agg_kind, fl_cfg)
     if agg.clustered:
@@ -92,21 +142,80 @@ def client_update_step(global_params: PyTree, data_sel: Dict[str, Array],
             "client_update_step is the single-global-model round; clustered "
             "families go through clustered_update_step (the engines branch "
             "on Aggregator.clustered at trace time)")
+    if (poison_scale is not None or stale_params is not None) and adv is None:
+        raise ValueError("poison_scale/stale_params need the per-slot adv "
+                         "mask to know which clients misbehave")
     reduce = _reduce_fn(agg)
     n_sel = live.shape[0]
     sizes = data_sel["valid"].reshape(n_sel, -1).sum(-1).astype(jnp.float32)
 
+    def _as_reported(updates: PyTree, base: PyTree | None) -> PyTree:
+        """Apply the poison behavior: byzantine slots report base +
+        scale·(update − base); base=None means the zero tree (gradients)."""
+        if poison_scale is None:
+            return updates
+        s = float(poison_scale)
+        a = adv.astype(jnp.float32)
+
+        def one(u: Array, b: Array | None) -> Array:
+            flip = b + s * (u - b) if b is not None else s * u
+            return jnp.where(_slot_bcast(a, u) > 0, flip.astype(u.dtype), u)
+
+        if base is None:
+            return jax.tree_util.tree_map(lambda u: one(u, None), updates)
+        return jax.tree_util.tree_map(one, updates, base)
+
+    def _norms(updates: PyTree, base: PyTree | None) -> Array:
+        sq = sum(((u - (0 if b is None else b)).astype(jnp.float32) ** 2)
+                 .reshape(n_sel, -1).sum(-1)
+                 for u, b in zip(jax.tree_util.tree_leaves(updates),
+                                 jax.tree_util.tree_leaves(base)
+                                 if base is not None else
+                                 [None] * len(
+                                     jax.tree_util.tree_leaves(updates))))
+        return jnp.sqrt(sq)
+
     if agg.base == "fedsgd":
         grads, m = jax.vmap(
             lambda b: local_gradient(global_params, b, loss_fn))(data_sel)
+        grads = _as_reported(grads, None)
+        if want_client_norms:
+            m = dict(m, update_norm=_norms(grads, None))
         agg_g = reduce(grads, live, sizes)
         new_params = apply_updates(
             global_params,
             jax.tree_util.tree_map(lambda g: -fl_cfg.lr * g, agg_g))
     else:
-        trained, m = jax.vmap(
-            lambda b: local_train(global_params, opt, b, loss_fn,
-                                  fl_cfg.local_epochs))(data_sel)
+        if stale_params is None:
+            trained, m = jax.vmap(
+                lambda b: local_train(global_params, opt, b, loss_fn,
+                                      fl_cfg.local_epochs))(data_sel)
+            base = global_params
+        else:
+            # Per-slot training base: byzantine slots start from the stale
+            # global, honest slots from the current one.
+            a_bool = adv > 0
+            base = jax.tree_util.tree_map(
+                lambda g, st: jnp.where(
+                    _slot_bcast(a_bool, g[None]),
+                    jnp.broadcast_to(st, (n_sel,) + st.shape),
+                    jnp.broadcast_to(g, (n_sel,) + g.shape)),
+                global_params, stale_params)
+            trained, m = jax.vmap(
+                lambda p, b: local_train(p, opt, b, loss_fn,
+                                         fl_cfg.local_epochs))(base, data_sel)
+        trained = _as_reported(
+            trained,
+            base if stale_params is not None else
+            jax.tree_util.tree_map(
+                lambda g: jnp.broadcast_to(g, (n_sel,) + g.shape),
+                global_params) if poison_scale is not None else None)
+        if want_client_norms:
+            nb = (base if stale_params is not None else
+                  jax.tree_util.tree_map(
+                      lambda g: jnp.broadcast_to(g, (n_sel,) + g.shape),
+                      global_params))
+            m = dict(m, update_norm=_norms(trained, nb))
         agg_p = reduce(trained, live, sizes)
         new_params = interpolate(global_params, agg_p, fl_cfg.server_lr)
 
@@ -174,7 +283,10 @@ def clustered_update_step(global_stack: PyTree, cluster_sel: Array,
 
 
 def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
-                  aggregation: str | None = None) -> Callable:
+                  aggregation: str | None = None, *,
+                  poison_scale: float | None = None,
+                  with_stale: bool = False,
+                  want_client_norms: bool = False) -> Callable:
     """Build the jitted round function.
 
     Returned signature: fl_round(global_params, round_batches, hists, key)
@@ -187,15 +299,40 @@ def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
     builds the initial one) and add ``info["cluster_assign"]`` — the (N,)
     round k-means assignment — and ``info["cluster_weights"]`` — the (M,)
     valid-client population per cluster, the caller's eval mixture weights.
+
+    Adversary statics (see :func:`client_update_step`): ``poison_scale``
+    and/or ``with_stale=True`` extend the signature with trailing
+    ``(..., adv, stale_params)`` arguments — ``adv`` the (N,) byzantine
+    mask, ``stale_params`` the τ-rounds-old global tree the host loop keeps
+    (pass the current params for ``poison``-only runs).  Clustered families
+    reject engine-level behaviors (per-cluster byzantine semantics are a
+    follow-up; the plan-level ``label_flip`` attack composes with them
+    already).  ``want_client_norms`` adds ``info["client_update_norms"]``
+    — per-CLIENT as-reported update ℓ₂ norms scattered to (N,), zero for
+    unselected clients.  All three default off, compiling the identical
+    pre-adversary program.
     """
     strategy = get_strategy(strategy_name or fl_cfg.selection)
     agg = resolve_aggregator(aggregation, fl_cfg)
+    attacked = poison_scale is not None or with_stale
+    if attacked and agg.clustered:
+        raise ValueError(
+            "engine-level adversary behaviors (poison/stale_update) are not "
+            "defined for clustered aggregation families; use the plan-level "
+            "label_flip transform or a single-global-model aggregator")
+    if with_stale and agg.base == "fedsgd":
+        raise ValueError(
+            "stale_update needs a stale TRAINING base; the fedsgd family "
+            "reports one gradient at the current global, so the behavior is "
+            "undefined for it")
     n_sel = fl_cfg.clients_per_round
     opt = get_optimizer(fl_cfg.optimizer, fl_cfg.lr)
 
     @jax.jit
     def fl_round(global_params: PyTree, round_batches: Dict[str, Array],
-                 hists: Array, key: Array) -> Tuple[PyTree, Dict[str, Array]]:
+                 hists: Array, key: Array, adv: Array | None = None,
+                 stale_params: PyTree | None = None
+                 ) -> Tuple[PyTree, Dict[str, Array]]:
         sel = strategy(key, hists, n_sel)
         # The gather width is the STRATEGY's static budget, not
         # clients_per_round: "full" gathers the whole population, a wide
@@ -217,8 +354,16 @@ def make_fl_round(loss_fn, fl_cfg, strategy_name: str | None = None,
                      "cluster_weights": cluster_counts(assign, agg.n_clusters,
                                                        weights=valid)}
         else:
-            new_params, m = client_update_step(global_params, data_sel, live,
-                                               loss_fn, opt, fl_cfg, agg)
+            new_params, m = client_update_step(
+                global_params, data_sel, live, loss_fn, opt, fl_cfg, agg,
+                adv=None if adv is None else adv[idx],
+                poison_scale=poison_scale,
+                stale_params=stale_params if with_stale else None,
+                want_client_norms=want_client_norms)
+            if want_client_norms:
+                extra = {"client_update_norms":
+                         jnp.zeros(hists.shape[0], jnp.float32)
+                         .at[idx].set(m["update_norm"] * live)}
 
         info = {
             **extra,

@@ -70,7 +70,8 @@ from repro.core.clustering import cluster_counts, kmeans_cluster
 from repro.core.selection import (SelectFn, get_strategy,
                                   selection_budget, topn_mask)
 from repro.core.aggregation import (exchange_selected_shards,
-                                    gather_client_shards, psum_weighted_mean)
+                                    gather_client_shards, interpolate,
+                                    psum_weighted_mean)
 from repro.kernels.dispatch import client_histograms, weighted_sum_tree
 
 Array = jax.Array
@@ -120,6 +121,11 @@ def _static_budget(select_fn: SelectFn, n_select: int, num_clients: int,
     return box["budget"]
 
 
+def _slot_bcast(v: Array, leaf: Array) -> Array:
+    """Broadcast a (S,) per-slot vector against a (S, ...) stacked leaf."""
+    return v.reshape(v.shape + (1,) * (leaf.ndim - 1))
+
+
 def make_sharded_fl_round(mesh: Mesh, client_axis: str,
                           local_step: Callable[[PyTree, Dict[str, Array]], PyTree],
                           n_select: int, num_classes: int,
@@ -131,7 +137,10 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
                           mode: str = "gather",
                           exchange: str = "a2a",
                           n_clusters: int = 1,
-                          kmeans_iters: int = 4) -> Callable:
+                          kmeans_iters: int = 4,
+                          reduce_fn: Optional[Callable] = None,
+                          poison_scale: Optional[float] = None,
+                          with_stale: bool = False) -> Callable:
     """Build the SPMD FL round.
 
     ``local_step(params, batch) -> params`` is ONE client's local training
@@ -182,18 +191,52 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
     zeroed, so every registry strategy's validity gate excludes it — the same
     single availability application the compiled simulator uses.
 
+    ``reduce_fn`` switches the scatter phase from the weighted delta-psum
+    collective to the GATHER-REDUCE form robust aggregation needs: the
+    ``slots`` per-shard deltas are all-gathered to the replicated
+    (B_pad, ...) stack, ``reduce_fn(trained, live, sizes)`` (a registered
+    ``Aggregator.reduce`` — median/trimmed_mean/krum) runs replicated on
+    every shard over ``trained = params + delta``, and the server
+    interpolation finishes as usual.  The reduction must mask dead slots
+    itself (every robust builtin does) — the padded ``B_pad − B`` slots
+    arrive dead, exactly like a short selection.  Because the builtins are
+    translation-equivariant, reduce-the-trained ≡ reduce-the-delta, so the
+    gather path matches the host/sim robust trajectories the same way the
+    psum pair matches fedavg.  Requires ``mode="gather"`` and a non-clustered
+    family.
+
+    Adversary statics (mirror of :func:`repro.fl.round.make_fl_round`, both
+    default-off → the identical pre-adversary program): ``poison_scale``
+    and/or ``with_stale=True`` extend the signature with a replicated (N,)
+    0/1 ``adv`` byzantine-mask argument (and, for ``with_stale``, a
+    ``stale_params`` tree sharded like ``params``): byzantine slots train
+    from the stale tree and report ``base + scale·(θ' − base)``, honest
+    slots are untouched.  Not defined for clustered families.
+
     Returned signature: ``round_fn(params, batch, labels, valid, key
-    [, avail]) -> (new_params, info)`` with ``key`` the round's selection
-    PRNG key (replicated; used by stochastic strategies such as ``random``).
-    The wrapper exposes the static facts: ``round_fn.budget`` (B),
-    ``round_fn.trained_per_round`` (clients that spend FLOPs: B_pad gathered,
-    N masked) and ``round_fn.flop_sparsity`` (1 − trained/N).
+    [, avail][, adv][, stale_params]) -> (new_params, info)`` with ``key``
+    the round's selection PRNG key (replicated; used by stochastic
+    strategies such as ``random``).  The wrapper exposes the static facts:
+    ``round_fn.budget`` (B), ``round_fn.trained_per_round`` (clients that
+    spend FLOPs: B_pad gathered, N masked) and ``round_fn.flop_sparsity``
+    (1 − trained/N).
     """
     if mode not in ("gather", "masked"):
         raise ValueError(f"mode must be 'gather' or 'masked'; got {mode!r}")
     if exchange not in ("a2a", "allgather"):
         raise ValueError(f"exchange must be 'a2a' or 'allgather'; "
                          f"got {exchange!r}")
+    attacked = poison_scale is not None or with_stale
+    if reduce_fn is not None or attacked:
+        if n_clusters > 1:
+            raise ValueError(
+                "custom reduce overrides and engine-level adversary "
+                "behaviors are single-global-model features; clustered "
+                "families keep the per-cluster delta-psum pair")
+        if reduce_fn is not None and mode != "gather":
+            raise ValueError(
+                "reduce_fn needs mode='gather' — the masked round's deltas "
+                "are laid out in client-id order, not selection order")
     n_groups = mesh.shape[client_axis]
     n_clients = n_groups if num_clients is None else int(num_clients)
     if n_clients % n_groups:
@@ -209,8 +252,14 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
     trained_per_round = budget_padded if mode == "gather" else n_clients
 
     def round_fn(params: PyTree, batch: Dict[str, Array], labels: Array,
-                 valid: Array, key: Array, avail: Array | None = None
+                 valid: Array, key: Array, *extras: Any
                  ) -> Tuple[PyTree, Dict[str, Array]]:
+        # Trailing args appear in build-static order: [avail][, adv]
+        # [, stale_params] — unpack by the same statics that built in_specs.
+        rest = list(extras)
+        avail = rest.pop(0) if with_availability else None
+        adv = rest.pop(0) if attacked else None
+        stale_params = rest.pop(0) if with_stale else None
         # labels/valid: (num_clients, n_i) sharded over the client axis →
         # per-shard (per_group, n_i); batch leaves likewise (per_group, ...).
         hist = client_histograms(jnp.where(valid, labels, 0), num_classes,
@@ -277,13 +326,65 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
                                                       weights=valid_all)}
             return new_global, info
 
-        new_local = jax.vmap(local_step, in_axes=(None, 0))(params, my_batch)
+        n_slots = live.shape[0]
+        if with_stale:
+            # Byzantine slots train from the τ-rounds-old global tree the
+            # caller carries; honest slots from the current one — the same
+            # per-slot base jnp.where the host round builds.
+            a_bool = adv[my_slots] > 0
+            base = jax.tree_util.tree_map(
+                lambda gp, st: jnp.where(
+                    _slot_bcast(a_bool, gp[None]),
+                    jnp.broadcast_to(st, (n_slots,) + st.shape),
+                    jnp.broadcast_to(gp, (n_slots,) + gp.shape)),
+                params, stale_params)
+            new_local = jax.vmap(local_step)(base, my_batch)
+        else:
+            base = None
+            new_local = jax.vmap(local_step, in_axes=(None, 0))(params,
+                                                                my_batch)
+        if poison_scale is not None:
+            # Byzantine slots report base + s·(θ' − base) — with the fedsgd
+            # local_step (θ − lr·∇) and base = θ this is exactly the host
+            # round's scaled-gradient report, so one statement covers both
+            # families.
+            s = float(poison_scale)
+            a = adv[my_slots].astype(jnp.float32)
+            pb = base if base is not None else jax.tree_util.tree_map(
+                lambda gp: jnp.broadcast_to(gp, (n_slots,) + gp.shape),
+                params)
+            new_local = jax.tree_util.tree_map(
+                lambda u, b: jnp.where(_slot_bcast(a, u) > 0,
+                                       (b + s * (u - b)).astype(u.dtype), u),
+                new_local, pb)
         # Aggregating DELTAS (not params) tolerates low precision: bf16
         # halves the cross-pod all-reduce bytes (§Perf, FL-round lever).
         delta = jax.tree_util.tree_map(
             lambda a, b: (a.astype(jnp.float32)
                           - b.astype(jnp.float32)).astype(dt),
             new_local, params)
+        info = {"mask": sel.mask, "num_selected": sel.mask.sum(),
+                "scores": sel.scores}
+        if reduce_fn is not None:
+            # GATHER-REDUCE: all-gather the B_pad selected deltas (still the
+            # compact delta form — bf16 agg_dtype halves these bytes too),
+            # rebuild the trained stack and run the robust reduction
+            # replicated on every shard; dead/padded slots are masked by the
+            # reduction itself.  live/sizes come from the replicated
+            # selection, so no second collective is needed.
+            order_b = sel.order[:budget_padded]
+            delta_all = gather_client_shards(delta, client_axis)
+            trained = jax.tree_util.tree_map(
+                lambda p, d: p.astype(jnp.float32) + d.astype(jnp.float32),
+                params, delta_all)
+            live_all = sel.mask[order_b]
+            agg_p = reduce_fn(trained, live_all, sizes[order_b])
+            new_global = interpolate(params, agg_p, server_lr)
+            any_live = live_all.sum() > 0
+            new_global = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(any_live, new, old),
+                new_global, params)
+            return new_global, info
         # The in-shard Σ_s w·Δ slot reduction routes through the compute
         # dispatch (fused Pallas kernel on TPU, plain XLA elsewhere); the
         # psum pair then finishes the replicated mean.
@@ -294,8 +395,6 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
             lambda p, d: (p.astype(jnp.float32)
                           + server_lr * d).astype(p.dtype),
             params, agg_delta)
-        info = {"mask": sel.mask, "num_selected": sel.mask.sum(),
-                "scores": sel.scores}
         return new_global, info
 
     def add_client_axis(spec):
@@ -313,6 +412,12 @@ def make_sharded_fl_round(mesh: Mesh, client_axis: str,
     in_specs = (params_pspec, batch_specs, lv_spec, lv_spec, P())
     if with_availability:
         in_specs = in_specs + (lv_spec,)
+    if attacked:
+        # The (N,) byzantine mask is replicated — every shard indexes its own
+        # my_slots out of the full mask, exactly like the replicated order.
+        in_specs = in_specs + (P(),)
+    if with_stale:
+        in_specs = in_specs + (params_pspec,)
     # jit the mapped round: eager shard_map re-lowers on every call, which
     # would make each round pay compile time — jit compiles once per shape.
     mapped = jax.jit(shard_map(round_fn, mesh, in_specs=in_specs,

@@ -55,7 +55,8 @@ from repro.obs import (collect_metrics, record_memory_analysis,
                        resolve_metrics, resolve_telemetry_request)
 from repro.optim import get_optimizer
 from .round import (client_update_step, clustered_update_step,
-                    resolve_aggregator, stack_global_params)
+                    resolve_adversary, resolve_aggregator,
+                    stack_global_params)
 from .workloads import Workload, get_workload
 
 Array = jax.Array
@@ -150,7 +151,8 @@ def make_trial_fn(fl_cfg, ds=None, *,
                   eval_n_per_class: int = 50,
                   strategies: Optional[Sequence[str]] = None,
                   workload: "str | Workload" = "cnn",
-                  telemetry: Sequence[str] = ()):
+                  telemetry: Sequence[str] = (),
+                  adversary: Optional[dict] = None):
     """Build ``trial(plan, sid, seed, avail) -> (acc, loss, nsel, msum)`` —
     one FL trial as a pure jit/vmap-able function of device arrays.
 
@@ -182,6 +184,15 @@ def make_trial_fn(fl_cfg, ds=None, *,
     ``(trajectories, {name: (rounds, …)})`` — the metric series ride the
     same scan ys — and with none resolved the returned function (and the
     compiled program) is exactly the telemetry-free one.
+
+    ``adversary`` (see :func:`resolve_adversary`) enables the engine-level
+    byzantine behaviors: with a non-empty ``behaviors`` set, the trial takes
+    a trailing ``adv`` argument — the (N,) 0/1 per-client byzantine mask
+    (``repro.core.adversary_mask``) — and byzantine clients ``poison`` their
+    reported updates (``scale``·delta) and/or train from a ``tau``-rounds-old
+    global (``stale_update``; the scan carry gains a (τ+1)-deep parameter
+    ring, reading θ₀ for t < τ).  Behaviors are rejected for clustered
+    families.  No behaviors → the 4-argument trial, program unchanged.
     """
     wl = get_workload(workload)
     ds = wl.dataset(ds)
@@ -190,6 +201,18 @@ def make_trial_fn(fl_cfg, ds=None, *,
     for name in universe:
         strategy_id(name)  # validate early: unknown names raise here
     agg = resolve_aggregator(aggregation, fl_cfg)
+    poison_scale, tau = resolve_adversary(adversary)
+    attacked = poison_scale is not None or tau > 0
+    if attacked and agg.clustered:
+        raise ValueError(
+            "engine-level adversary behaviors (poison/stale_update) are not "
+            "defined for clustered aggregation families; use the plan-level "
+            "label_flip transform or a single-global-model aggregator")
+    if tau > 0 and agg.base == "fedsgd":
+        raise ValueError(
+            "stale_update needs a stale TRAINING base; the fedsgd family "
+            "reports one gradient at the current global, so the behavior is "
+            "undefined for it")
     n_sel = fl_cfg.clients_per_round
     # `is None`, not falsy-or: rounds=0 is a legitimate zero-round dry-run
     # (empty trajectories), not a request for the full schedule.
@@ -201,13 +224,24 @@ def make_trial_fn(fl_cfg, ds=None, *,
     avail_keys = ["hists", "mask", "num_classes", "params_old", "params_new"]
     if agg.clustered:
         avail_keys += ["assign", "n_clusters", "centroids", "prev_centroids"]
+    else:
+        avail_keys += ["client_update_norms"]
     metrics = resolve_metrics(resolve_telemetry_request(telemetry), avail_keys)
     # Only clustered centroid-drift needs last round's centroids in the scan
     # carry; everything else observes the current round alone.
     needs_prev = agg.clustered and any(
         "prev_centroids" in m.requires for m in metrics)
+    # Per-client update norms are computed only when a resolved metric asks
+    # (the delta_outlier z-scores) — same gating rule as needs_prev, so
+    # telemetry off keeps the scan body bit-identical.
+    needs_norms = not agg.clustered and any(
+        "client_update_norms" in m.requires for m in metrics)
 
-    def trial(plan: Array, sid: Array, seed: Array, avail: Array):
+    def trial(plan: Array, sid: Array, seed: Array, avail: Array,
+              adv: Optional[Array] = None):
+        if attacked and adv is None:
+            raise ValueError("adversary behaviors requested at trial build "
+                             "time need the (N,) adv mask as a 5th argument")
         t_static = plan.shape[0]
         key = jax.random.PRNGKey(seed)
         params = wl.init(jax.random.fold_in(key, 1), ds)
@@ -221,11 +255,25 @@ def make_trial_fn(fl_cfg, ds=None, *,
                 jax.ShapeDtypeStruct(plan.shape[1:], jnp.int32))
             carry0 = (params, jnp.zeros(
                 (agg.n_clusters, probe["hists"].shape[1]), jnp.float32))
+        elif tau:
+            # stale_update ring: slot j holds the newest θ_{t'} with
+            # t' ≡ j (mod τ+1); every slot starts at θ₀ so reads before
+            # round τ see the init (a client can never be staler than the
+            # run is old).
+            carry0 = (params, jax.tree_util.tree_map(
+                lambda p: jnp.broadcast_to(p[None], (tau + 1,) + p.shape),
+                params))
         else:
             carry0 = params
 
         def round_body(carry, t):
-            params, prev_cent = carry if needs_prev else (carry, None)
+            prev_cent = ring = None
+            if needs_prev:
+                params, prev_cent = carry
+            elif tau:
+                params, ring = carry
+            else:
+                params = carry
             # Same fold_in tree as the host loop — parity is bit-for-bit in
             # the randomness, so trajectories differ only by op reordering.
             kt = jax.random.fold_in(key, 1000 + t)
@@ -252,10 +300,15 @@ def make_trial_fn(fl_cfg, ds=None, *,
             live = mask[idx]
             data_sel = jax.tree_util.tree_map(lambda x: x[idx], batches)
 
-            def emit(new_params, main, cent=None, assign=None):
+            def emit(new_params, main, cent=None, assign=None, norms=None):
                 # Metric collection is additive: the trajectory tuple is
                 # untouched, the series ride alongside as a second ys leaf.
-                new_carry = (new_params, cent) if needs_prev else new_params
+                if needs_prev:
+                    new_carry = (new_params, cent)
+                elif tau:
+                    new_carry = (new_params, ring)
+                else:
+                    new_carry = new_params
                 if not metrics:
                     return new_carry, main
                 state = {"hists": hists, "mask": mask,
@@ -264,6 +317,8 @@ def make_trial_fn(fl_cfg, ds=None, *,
                 if agg.clustered:
                     state.update(assign=assign, n_clusters=agg.n_clusters,
                                  centroids=cent, prev_centroids=prev_cent)
+                if needs_norms:
+                    state["client_update_norms"] = norms
                 return new_carry, (main, collect_metrics(metrics, state))
 
             if agg.clustered:
@@ -289,12 +344,31 @@ def make_trial_fn(fl_cfg, ds=None, *,
                              live.sum(), mask.sum(),
                              acc_c, loss_c, assign),
                             cent=cent, assign=assign)
-            new_params, m = client_update_step(params, data_sel, live,
-                                               loss_fn, opt, fl_cfg, agg)
+            stale = None
+            if tau:
+                # Write θ_t into its ring slot FIRST (so τ=0 degenerates to
+                # reading the current params), then read θ_{t−τ} (θ₀ before
+                # round τ — every unwritten slot still holds the init).
+                ring = jax.tree_util.tree_map(
+                    lambda r, p: jax.lax.dynamic_update_index_in_dim(
+                        r, p, t % (tau + 1), 0), ring, params)
+                stale = jax.tree_util.tree_map(
+                    lambda r: jax.lax.dynamic_index_in_dim(
+                        r, jnp.mod(t - tau, tau + 1), 0, keepdims=False),
+                    ring)
+            new_params, m = client_update_step(
+                params, data_sel, live, loss_fn, opt, fl_cfg, agg,
+                adv=adv[idx] if attacked else None,
+                poison_scale=poison_scale, stale_params=stale,
+                want_client_norms=needs_norms)
+            norms = None
+            if needs_norms:
+                norms = (jnp.zeros(hists.shape[0], jnp.float32)
+                         .at[idx].set(m["update_norm"] * live))
 
             ev_loss, ev_m = eval_fn(new_params, eval_batch)
             return emit(new_params, (ev_m["accuracy"], ev_loss, live.sum(),
-                                     mask.sum()))
+                                     mask.sum()), norms=norms)
 
         _, traj = jax.lax.scan(round_body, carry0, jnp.arange(num_rounds))
         return traj
@@ -342,26 +416,33 @@ def simulate(plan: np.ndarray, fl_cfg, *, strategy: Optional[str] = None,
              avail: Optional[np.ndarray] = None,
              eval_n_per_class: int = 50,
              workload: "str | Workload" = "cnn",
-             telemetry: Sequence[str] = ()) -> GridResult:
-    """One FL trial through the compiled engine (host-loop-compatible knobs)."""
+             telemetry: Sequence[str] = (),
+             adversary: Optional[dict] = None,
+             adv: Optional[np.ndarray] = None) -> GridResult:
+    """One FL trial through the compiled engine (host-loop-compatible knobs).
+
+    ``adversary`` + ``adv`` (the (N,) byzantine mask) enable the engine-level
+    attack behaviors — see :func:`make_trial_fn`."""
     import time
     name = strategy or fl_cfg.selection
     trial = make_trial_fn(fl_cfg, ds, aggregation=aggregation, rounds=rounds,
                           eval_n_per_class=eval_n_per_class,
                           strategies=(name,), workload=workload,
-                          telemetry=telemetry)
+                          telemetry=telemetry, adversary=adversary)
     sid = jnp.int32(0)      # single-entry universe → direct call inside
     seed = fl_cfg.seed if seed is None else seed
     av = (jnp.asarray(avail, jnp.float32) if avail is not None
           else _ones_avail(plan))
+    args = (jnp.asarray(plan, jnp.int32), sid, jnp.int32(seed), av)
+    if adv is not None:
+        args += (jnp.asarray(adv, jnp.float32),)
     fn = jax.jit(trial)
     t0 = time.perf_counter()
-    lowered = fn.lower(jnp.asarray(plan, jnp.int32), sid, jnp.int32(seed), av)
+    lowered = fn.lower(*args)
     compiled = lowered.compile()
     t1 = time.perf_counter()
     record_memory_analysis("sim:trial", compiled)
-    out = jax.block_until_ready(
-        compiled(jnp.asarray(plan, jnp.int32), sid, jnp.int32(seed), av))
+    out = jax.block_until_ready(compiled(*args))
     t2 = time.perf_counter()
     out, tel = _split_telemetry(out)
     acc, loss, nsel, msum = out[:4]
@@ -426,10 +507,16 @@ def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
                 avail: Optional[np.ndarray] = None,
                 eval_n_per_class: int = 50,
                 workload: "str | Workload" = "cnn",
-                telemetry: Sequence[str] = ()) -> GridResult:
+                telemetry: Sequence[str] = (),
+                adversary: Optional[dict] = None,
+                adv: Optional[np.ndarray] = None) -> GridResult:
     """Compiled grid primitive on raw device arrays (the "sim" engine body):
     vmap(trial) over seeds × strategies × cases, one lower+compile+launch.
-    Prefer ``run_grid`` / ``experiment.run`` — this is their backend."""
+    Prefer ``run_grid`` / ``experiment.run`` — this is their backend.
+
+    ``adversary`` + ``adv`` — the (R, N) PER-SEED byzantine masks (the mask
+    is part of the seed's random draw, like a per-seed plan) — enable the
+    engine-level attack behaviors; see :func:`make_trial_fn`."""
     import time
     plans = np.asarray(plans)
     seeds = list(seeds)          # consume a one-shot iterable exactly once
@@ -443,7 +530,7 @@ def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
     trial = make_trial_fn(fl_cfg, ds, aggregation=aggregation, rounds=rounds,
                           eval_n_per_class=eval_n_per_class,
                           strategies=strategies, workload=workload,
-                          telemetry=telemetry)
+                          telemetry=telemetry, adversary=adversary)
     # sids index the requested universe (the compiled program only contains
     # these strategies); position i of the output's strategy axis is
     # strategies[i].
@@ -457,11 +544,24 @@ def grid_arrays(plans: np.ndarray, fl_cfg, *, strategies: Sequence[str],
         if av.ndim == 2:
             av = jnp.broadcast_to(av[None], (plans.shape[0],) + av.shape)
 
-    f = jax.vmap(trial, in_axes=(0 if per_seed else None, None, 0, None))  # seeds
-    f = jax.vmap(f, in_axes=(None, 0, None, None))       # strategies
-    f = jax.vmap(f, in_axes=(0, None, None, 0))          # cases
-    fn = jax.jit(f)
+    # seeds / strategies / cases vmap nest; the optional per-seed adv mask
+    # batches with the seed axis only (same mask for every case/strategy).
+    seed_axes = (0 if per_seed else None, None, 0, None)
+    strat_axes = (None, 0, None, None)
+    case_axes = (0, None, None, 0)
     args = (jnp.asarray(plans, jnp.int32), sids, seed_arr, av)
+    if adv is not None:
+        adv = jnp.asarray(adv, jnp.float32)
+        if adv.ndim != 2 or adv.shape[0] != len(seeds):
+            raise ValueError(f"adv must be (len(seeds), N); got {adv.shape}")
+        seed_axes += (0,)
+        strat_axes += (None,)
+        case_axes += (None,)
+        args += (adv,)
+    f = jax.vmap(trial, in_axes=seed_axes)               # seeds
+    f = jax.vmap(f, in_axes=strat_axes)                  # strategies
+    f = jax.vmap(f, in_axes=case_axes)                   # cases
+    fn = jax.jit(f)
     t0 = time.perf_counter()
     compiled = fn.lower(*args).compile()
     t1 = time.perf_counter()

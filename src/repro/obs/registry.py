@@ -26,6 +26,12 @@ int (shapes):
 ``staleness_delays`` (K,) int32 effective staleness of each buffered
                     arrival                              (async only)
 ``tau_max``         static int                           (async only)
+``client_update_norms`` (N,) f32 ℓ₂ norm of each client's AS-REPORTED
+                    update this round (post-poison — the attack-visible
+                    signal), zero for unselected clients (single-global-
+                    model families on sim/host; computed only when a
+                    resolved metric asks, so telemetry-off programs are
+                    bit-identical)
 ==================  =======================================================
 
 A metric declares ``requires`` — the state keys it reads; an engine collects
@@ -243,6 +249,20 @@ def _staleness_hist(state: Mapping[str, Any]) -> Array:
     return onehot.astype(jnp.float32).sum(0)
 
 
+def _delta_outlier(state: Mapping[str, Any]) -> Array:
+    """(N,) z-scores of each SELECTED client's as-reported update norm
+    against the round's selected-set mean/std — the byzantine fingerprint: a
+    poisoned (scale·Δ) or stale report sits |z| σs away from the honest
+    cluster.  Unselected clients read exactly 0; an all-equal round (e.g.
+    one selected client) reads 0 via the ε-guarded std."""
+    norms = state["client_update_norms"]
+    m = state["mask"]
+    cnt = jnp.maximum(m.sum(), 1.0)
+    mean = (norms * m).sum() / cnt
+    var = (((norms - mean) ** 2) * m).sum() / cnt
+    return (norms - mean) / jnp.sqrt(var + 1e-12) * m
+
+
 register_metric("selection_entropy", _selection_entropy,
                 requires=("hists", "mask"))
 register_metric("selected_label_hist", _selected_label_hist,
@@ -255,3 +275,5 @@ register_metric("centroid_drift", _centroid_drift,
                 requires=("centroids", "prev_centroids"))
 register_metric("staleness_hist", _staleness_hist,
                 requires=("staleness_delays", "tau_max"), axes=("staleness",))
+register_metric("delta_outlier", _delta_outlier,
+                requires=("client_update_norms", "mask"), axes=("client",))

@@ -18,6 +18,8 @@ from repro.obs.envelope import series_arrays
 # Health-flag thresholds (round-level heuristics, not acceptance gates).
 ENTROPY_COLLAPSE_FRACTION = 0.5   # min round entropy < 0.5 * max → collapse
 LOSS_DIVERGENCE_FACTOR = 2.0      # final loss > 2 * min loss → divergence
+BYZANTINE_PERSISTENT_Z = 1.1      # |mean selected-round z| above → suspected
+BYZANTINE_MIN_ROUNDS = 2          # ... over at least this many appearances
 
 
 def _cell_series(arr: np.ndarray) -> np.ndarray:
@@ -36,6 +38,16 @@ def health_flags(envelope: Mapping[str, Any],
     - ``cluster starvation``: a cluster whose occupancy is zero on every
       round — the "cluster 3 starved after round 12" failure mode.
     - ``loss divergence``: final mean loss more than 2x the run minimum.
+    - ``suspected byzantine client``: some client's ``delta_outlier``
+      z-score (as-reported update norm vs the round's selected-set
+      mean/std) stays one-sided and large — |mean z over its selected
+      rounds| > ``BYZANTINE_PERSISTENT_Z`` across ≥ ``BYZANTINE_MIN_ROUNDS``
+      appearances.  Persistence is the fingerprint: with small cohorts any
+      single round's max |z| saturates at √(n−1) even for honest outliers,
+      but honest outliers rotate while a byzantine client is the SAME
+      extreme every round.  Detects norm-visible attacks (poison with
+      |scale| ≠ 1); a pure sign-flip preserves the norm and needs
+      direction-aware detection.
     """
     flags: List[str] = []
     series = series_arrays(envelope)
@@ -57,6 +69,26 @@ def health_flags(envelope: Mapping[str, Any],
             for m in starved:
                 flags.append(f"cluster starvation: cluster {int(m)} has zero "
                              f"occupancy in every round")
+
+    dz = series.get("delta_outlier")
+    if dz is not None:
+        z = np.asarray(dz, dtype=np.float64)
+        if z.ndim >= 2 and z.size:
+            zz = z.reshape((-1,) + z.shape[-2:])      # (cells, rounds, N)
+            sel = np.abs(zz) > 1e-12                  # selected appearances
+            cnt = sel.sum(axis=1)                     # (cells, N)
+            persist = np.abs(zz.sum(axis=1)) / np.maximum(cnt, 1)
+            persist = np.where(cnt >= BYZANTINE_MIN_ROUNDS, persist, 0.0)
+            cells, clients = np.nonzero(persist > BYZANTINE_PERSISTENT_Z)
+            if cells.size:
+                worst = int(np.argmax(persist[cells, clients]))
+                c, i = int(cells[worst]), int(clients[worst])
+                flags.append(
+                    f"suspected byzantine client: {cells.size} (cell, "
+                    f"client) pair(s) with |mean selected-round "
+                    f"delta_outlier z| > {BYZANTINE_PERSISTENT_Z:.2f} "
+                    f"(worst: client {i}, {persist[c, i]:.2f}σ over "
+                    f"{int(cnt[c, i])} round(s))")
 
     if loss is not None and loss.size:
         mean_loss = np.asarray(loss, dtype=np.float64)

@@ -414,22 +414,22 @@ class TestShardedEngine:
         spec = ExperimentSpec(
             scenarios=(ScenarioSpec.from_case("iid"),),
             strategies=("random",), engine="sharded", fl=MICRO,
-            aggregation="median")
+            aggregation="_no_such_aggregator")
         with pytest.raises(KeyError, match="unknown aggregator"):
             run(spec)
-        # A registered aggregator with a custom reduce override is a valid
-        # spec, but the sharded engine's delta-psum collective cannot honor
-        # it — engine-level ValueError.
+        # Custom reduce overrides run through the sharded engine's
+        # gather-reduce path — but only for single-global-model families;
+        # the clustered families keep the per-cluster delta-psum pair.
         register_aggregator(
-            "_test_sharded_custom_reduce",
-            Aggregator(base="fedavg",
+            "_test_sharded_clustered_reduce",
+            Aggregator(base="fedavg", n_clusters=2,
                        reduce=lambda stacked, live, sizes: stacked),
             overwrite=True)
         spec = ExperimentSpec(
             scenarios=(ScenarioSpec.from_case("iid"),),
             strategies=("random",), engine="sharded", fl=MICRO,
-            aggregation="_test_sharded_custom_reduce")
-        with pytest.raises(ValueError, match="delta-psum"):
+            aggregation="_test_sharded_clustered_reduce")
+        with pytest.raises(ValueError, match="single-global-model"):
             run(spec)
 
     def test_sharded_clustered_matches_sim(self):

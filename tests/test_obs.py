@@ -34,7 +34,8 @@ MICRO = FLConfig(num_clients=6, clients_per_round=2, global_epochs=2,
                  local_epochs=1, batch_size=8, lr=1e-3)
 
 BUILTINS = ("selection_entropy", "selected_label_hist", "update_norm",
-            "cluster_occupancy", "centroid_drift", "staleness_hist")
+            "cluster_occupancy", "centroid_drift", "staleness_hist",
+            "delta_outlier")
 
 
 def micro_spec(**kw):
@@ -66,7 +67,7 @@ def cached_run(**kw):
 
 class TestMetricRegistry:
     def test_builtin_ids_are_stable(self):
-        assert registered_metrics()[:6] == BUILTINS
+        assert registered_metrics()[:len(BUILTINS)] == BUILTINS
         for i, name in enumerate(BUILTINS):
             assert metric_id(name) == i
 

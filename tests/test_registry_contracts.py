@@ -69,7 +69,8 @@ AXES = (
          lambda: _spec(strategies=("_rc_no_such_strategy",))),
     Axis("aggregators",
          ("fedavg", "fedsgd", "clustered_fedavg", "clustered_fedsgd",
-          "clustered_fedavg4", "clustered_fedavg8"),
+          "clustered_fedavg4", "clustered_fedavg8", "median",
+          "trimmed_mean", "krum"),
          registered_aggregators,
          lambda n, e: register_aggregator(n, e, overwrite=True),
          lambda i: (Aggregator("fedavg"),
@@ -95,7 +96,7 @@ AXES = (
          None,
          lambda: _spec(engine="_rc_no_such_engine")),
     Axis("transforms",
-         ("availability", "quantity_skew"),
+         ("availability", "quantity_skew", "label_flip"),
          registered_transforms,
          lambda n, e: register_transform(n, e, overwrite=True),
          lambda i: ((lambda plan, key, **kw: plan),

@@ -1,0 +1,330 @@
+"""Byzantine-robust FL: robust reducers, the adversary model, and attacked
+determinism.
+
+The acceptance pins:
+
+- the robust builtin reducers (``median`` / ``trimmed_mean`` / ``krum``,
+  registry ids 6..8) match NumPy oracles coordinate-for-coordinate,
+  including dead padded slots and the c=1 degenerate round;
+- the adversary model is deterministic: one seeded mask per experiment
+  seed, identical across engines, pinned against a golden draw;
+- host ≡ sim trajectory parity holds under a composed
+  ``label_flip`` + ``poison`` attack, and the sharded gather-reduce path
+  matches the host trajectories within 1e-5 (subprocess, 8 emulated
+  devices);
+- attacked runs with telemetry OFF are bit-identical to the same runs with
+  the ``delta_outlier`` metric on — observation never perturbs training;
+- the A2xx contract pass accepts the robust builtins and rejects a seeded
+  structure-violating custom reduce at ``register(check=True)``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import ContractError, check_aggregator
+from repro.configs.paper_cnn import FLConfig
+from repro.core.aggregation import (AGGREGATORS, Aggregator, aggregator_id,
+                                    krum_reduce, median_reduce,
+                                    register_aggregator,
+                                    registered_aggregators,
+                                    trimmed_mean_reduce)
+from repro.core.noniid import adversary_mask, flip_labels
+from repro.fl import ExperimentSpec, ScenarioSpec, run
+from repro.fl.experiment import label_flip
+
+MICRO = FLConfig(num_clients=8, clients_per_round=4, global_epochs=2,
+                 local_epochs=1, batch_size=8, lr=1e-3)
+
+POISON = {"frac": 0.25, "behaviors": ("poison",), "scale": -4.0}
+
+
+def _stacked(s, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(s, 4, 3)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(s, 3)), jnp.float32)}
+
+
+def _np_rows(tree):
+    return np.concatenate([np.asarray(v).reshape(v.shape[0], -1)
+                           for v in tree.values()], axis=1)
+
+
+def _spec(**kw):
+    base = dict(scenarios=(ScenarioSpec.from_case("case1b",
+                                                  samples_per_client=8),),
+                strategies=("labelwise",), seeds=(0,), fl=MICRO,
+                engine="sim", eval_n_per_class=2)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# Robust reducers vs NumPy oracles
+# ---------------------------------------------------------------------------
+
+class TestRobustReducers:
+    def test_builtin_ids_pinned(self):
+        assert aggregator_id("median") == 6
+        assert aggregator_id("trimmed_mean") == 7
+        assert aggregator_id("krum") == 8
+        for name in ("median", "trimmed_mean", "krum"):
+            agg = AGGREGATORS[name]
+            assert agg.base == "fedavg" and agg.reduce is not None
+
+    @pytest.mark.parametrize("live", ([1, 1, 1, 0, 1], [1, 1, 1, 1, 0]))
+    def test_median_matches_numpy(self, live):
+        tree = _stacked(5)
+        lv = jnp.asarray(live, jnp.float32)
+        got = median_reduce(tree, lv)
+        keep = np.asarray(live) > 0
+        for k in tree:
+            want = np.median(np.asarray(tree[k])[keep], axis=0)
+            np.testing.assert_allclose(np.asarray(got[k]), want, rtol=1e-6)
+
+    def test_trimmed_mean_matches_numpy(self):
+        tree = _stacked(8)
+        live = jnp.asarray([1, 1, 0, 1, 1, 1, 0, 1], jnp.float32)
+        got = trimmed_mean_reduce(tree, live)
+        keep = np.asarray(live) > 0
+        for k in tree:
+            x = np.sort(np.asarray(tree[k])[keep], axis=0)
+            want = x[1:-1].mean(axis=0)        # k = floor(0.25 * 6) = 1
+            np.testing.assert_allclose(np.asarray(got[k]), want, rtol=1e-5,
+                                       atol=1e-6)
+
+    def test_trimmed_mean_small_cohort_is_plain_mean(self):
+        # c = 3 -> k = 0: nothing to trim, uniform mean over the live rows
+        tree = _stacked(4)
+        live = jnp.asarray([1, 0, 1, 1], jnp.float32)
+        got = trimmed_mean_reduce(tree, live)
+        keep = np.asarray(live) > 0
+        for k in tree:
+            np.testing.assert_allclose(
+                np.asarray(got[k]), np.asarray(tree[k])[keep].mean(axis=0),
+                rtol=1e-5, atol=1e-6)
+
+    def test_krum_matches_numpy_score(self):
+        # 4 honest rows clustered near the origin + 1 far outlier: krum must
+        # return one honest client's ENTIRE tree, and exactly the argmin of
+        # the oracle score.
+        rng = np.random.default_rng(1)
+        rows = rng.normal(scale=0.1, size=(5, 15))
+        rows[2] += 50.0
+        tree = {"w": jnp.asarray(rows[:, :12].reshape(5, 4, 3), jnp.float32),
+                "b": jnp.asarray(rows[:, 12:], jnp.float32)}
+        live = jnp.ones(5, jnp.float32)
+        got = krum_reduce(tree, live)
+        flat = _np_rows(tree)
+        d2 = ((flat[:, None] - flat[None, :]) ** 2).sum(-1)
+        np.fill_diagonal(d2, np.inf)
+        m = 5 - 1 - 2                              # f = floor(0.25 * 5) = 1
+        score = np.sort(d2, axis=1)[:, :m].sum(axis=1)
+        sel = int(np.argmin(score))
+        assert sel != 2                            # never the outlier
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(tree[k])[sel])
+
+    def test_krum_single_live_degenerate(self):
+        tree = _stacked(4)
+        live = jnp.asarray([0, 0, 1, 0], jnp.float32)
+        got = krum_reduce(tree, live)
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(tree[k])[2])
+
+    @pytest.mark.parametrize("reduce_fn", (median_reduce, trimmed_mean_reduce,
+                                           krum_reduce),
+                             ids=("median", "trimmed_mean", "krum"))
+    def test_dead_padded_slots_are_invisible(self, reduce_fn):
+        """Reducing (live rows + dead padding) == reducing just the live rows
+        — the property the sharded engine's B_pad gather-reduce rests on."""
+        tree6 = _stacked(6, seed=3)
+        live6 = jnp.asarray([1, 1, 1, 1, 0, 0], jnp.float32)
+        tree4 = {k: v[:4] for k, v in tree6.items()}
+        live4 = jnp.ones(4, jnp.float32)
+        got6, got4 = reduce_fn(tree6, live6), reduce_fn(tree4, live4)
+        for k in tree6:
+            np.testing.assert_allclose(np.asarray(got6[k]),
+                                       np.asarray(got4[k]), rtol=1e-6)
+
+    @pytest.mark.parametrize("reduce_fn", (median_reduce, trimmed_mean_reduce,
+                                           krum_reduce),
+                             ids=("median", "trimmed_mean", "krum"))
+    def test_sizes_ignored(self, reduce_fn):
+        # byzantine clients self-report n_i, so robust statistics must not
+        # weight by it
+        tree = _stacked(5, seed=4)
+        live = jnp.asarray([1, 1, 1, 1, 0], jnp.float32)
+        a = reduce_fn(tree, live, jnp.ones(5, jnp.float32))
+        b = reduce_fn(tree, live, jnp.asarray([1, 9, 100, 3, 7], jnp.float32))
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# ---------------------------------------------------------------------------
+# Adversary model: deterministic seeded masks + spec validation
+# ---------------------------------------------------------------------------
+
+class TestAdversaryModel:
+    def test_mask_deterministic_golden_pin(self):
+        m = adversary_mask(7, 16, 0.25)
+        np.testing.assert_array_equal(m, adversary_mask(7, 16, 0.25))
+        assert m.sum() == 4 and m.dtype == np.float32
+        # golden draw: np.random.default_rng(7) without-replacement choice —
+        # any change to the draw procedure breaks attacked-run repro
+        np.testing.assert_array_equal(np.flatnonzero(m), [8, 10, 12, 14])
+        assert adversary_mask(7, 16, 0.0).sum() == 0
+        with pytest.raises(ValueError, match="frac"):
+            adversary_mask(7, 16, 1.5)
+
+    def test_spec_seed_schedule(self):
+        # default: one mask per experiment seed, derived from it
+        spec = _spec(seeds=(0, 1, 2), adversary=POISON)
+        masks = spec.adversary_masks()
+        assert masks.shape == (3, 8)
+        np.testing.assert_array_equal(masks.sum(axis=1), [2, 2, 2])
+        np.testing.assert_array_equal(masks, spec.adversary_masks())
+        # explicit adversary seed: the SAME compromised set across all rows
+        pinned = _spec(seeds=(0, 1, 2),
+                       adversary={**POISON, "seed": 11}).adversary_masks()
+        assert (pinned == pinned[0]).all()
+        # no adversary -> no masks
+        assert _spec().adversary_masks() is None
+
+    def test_flip_labels_mirrors_adversary_rows_only(self):
+        plan = np.array([[[0, 1, 9], [3, 4, -1]]], dtype=np.int32)  # (1,2,3)
+        adv = np.array([1.0, 0.0], np.float32)
+        out = flip_labels(plan, adv, num_classes=10)
+        np.testing.assert_array_equal(out[0, 0], [9, 8, 0])   # mirrored
+        np.testing.assert_array_equal(out[0, 1], [3, 4, -1])  # honest + pad
+
+    def test_validate_guards(self):
+        with pytest.raises(ValueError, match="unknown adversary"):
+            _spec(adversary={"frac": 0.25, "bogus": 1}).validate()
+        with pytest.raises(ValueError, match="frac"):
+            _spec(adversary={"frac": 1.5}).validate()
+        with pytest.raises(ValueError, match="behavior"):
+            _spec(adversary={"frac": 0.25,
+                             "behaviors": ("_no_such",)}).validate()
+        with pytest.raises(ValueError, match="single-global-model|clustered"):
+            _spec(adversary=POISON,
+                  aggregation="clustered_fedavg").validate()
+        with pytest.raises(ValueError, match="fedsgd"):
+            _spec(adversary={"frac": 0.25, "behaviors": ("stale_update",)},
+                  aggregation="fedsgd").validate()
+        for engine in ("hier", "async"):
+            with pytest.raises(ValueError, match="engine"):
+                _spec(adversary=POISON, engine=engine).validate()
+
+
+# ---------------------------------------------------------------------------
+# Attacked-run determinism across engines
+# ---------------------------------------------------------------------------
+
+class TestAttackedEngineParity:
+    def test_host_sim_parity_under_label_flip_and_poison(self):
+        scen = (ScenarioSpec.from_case("case1b", samples_per_client=8,
+                                       transforms=(label_flip(0.25),)),)
+        base = dict(scenarios=scen, seeds=(0, 1), adversary=POISON)
+        sim = run(_spec(engine="sim", **base))
+        host = run(_spec(engine="host", **base))
+        np.testing.assert_array_equal(sim.num_selected, host.num_selected)
+        np.testing.assert_allclose(sim.loss, host.loss, rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(sim.accuracy, host.accuracy, atol=5e-3)
+        # the attack actually bites: attacked != clean trajectories
+        clean = run(_spec(engine="sim", scenarios=(
+            ScenarioSpec.from_case("case1b", samples_per_client=8),),
+            seeds=(0, 1)))
+        assert float(np.abs(sim.loss - clean.loss).max()) > 1e-3
+
+    def test_telemetry_off_is_bit_identical_to_observed_attacked_run(self):
+        base = dict(adversary=POISON)
+        plain = run(_spec(**base))
+        observed = run(_spec(telemetry=("delta_outlier",), **base))
+        np.testing.assert_array_equal(plain.loss, observed.loss)
+        np.testing.assert_array_equal(plain.accuracy, observed.accuracy)
+        np.testing.assert_array_equal(plain.num_selected,
+                                      observed.num_selected)
+        assert plain.telemetry() is None
+        z = observed.telemetry()["delta_outlier"]
+        assert z.shape == (1, 1, 1, MICRO.global_epochs, MICRO.num_clients)
+
+
+# ---------------------------------------------------------------------------
+# Contract pass over the robust builtins + a seeded violation
+# ---------------------------------------------------------------------------
+
+class TestRobustContracts:
+    def test_robust_builtins_pass_A2xx(self):
+        for name in ("median", "trimmed_mean", "krum"):
+            findings = check_aggregator(name, AGGREGATORS[name])
+            assert not findings.errors(), list(findings)
+
+    def test_structure_violating_reduce_is_A201_at_register_check(self):
+        # returns the LIVE mask instead of the per-client tree -> A201, and
+        # the failed registration must not touch the id ledger
+        before = registered_aggregators()
+        with pytest.raises(ContractError) as ei:
+            register_aggregator(
+                "_rb_bad_reduce",
+                Aggregator("fedavg",
+                           reduce=lambda stacked, live, sizes: live),
+                check=True)
+        assert "A201" in [d.code for d in ei.value.diagnostics]
+        assert registered_aggregators() == before
+
+
+# ---------------------------------------------------------------------------
+# Sharded gather-reduce (subprocess: forces 8 emulated devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestShardedRobust:
+    def test_sharded_gather_reduce_matches_host_and_sim(self):
+        """The lifted custom-reduce path: robust aggregation + poison on the
+        sharded engine pins trajectory parity — exact (<= 1e-5) against the
+        host engine (same f32 summation layout) and within f32
+        reduction-order tolerance against the compiled sim grid."""
+        script = textwrap.dedent("""
+            import numpy as np
+            from repro.configs.paper_cnn import FLConfig
+            from repro.fl import ExperimentSpec, ScenarioSpec, run
+            cfg = FLConfig(num_clients=16, clients_per_round=4,
+                           global_epochs=2, local_epochs=1, batch_size=8,
+                           lr=1e-3)
+            scen = (ScenarioSpec.from_case("case1b", samples_per_client=8),)
+            adv = {"frac": 0.25, "behaviors": ("poison",), "scale": -4.0}
+            for agg, adversary in (("trimmed_mean", adv), ("krum", {}),
+                                   ("median", {})):
+                base = dict(scenarios=scen, strategies=("labelwise",),
+                            seeds=(0,), fl=cfg, aggregation=agg,
+                            adversary=adversary, eval_n_per_class=2)
+                sh = run(ExperimentSpec(engine="sharded", **base))
+                ho = run(ExperimentSpec(engine="host", **base))
+                sim = run(ExperimentSpec(engine="sim", **base))
+                assert sh.meta["sharded"]["reduce"] == "gather"
+                np.testing.assert_array_equal(sh.num_selected,
+                                              sim.num_selected)
+                np.testing.assert_allclose(sh.loss, ho.loss, rtol=0,
+                                           atol=1e-5)
+                np.testing.assert_allclose(sh.accuracy, ho.accuracy,
+                                           atol=1e-6)
+                np.testing.assert_allclose(sh.loss, sim.loss, rtol=2e-4,
+                                           atol=2e-5)
+            print("SHARDED_ROBUST_OK")
+        """)
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8",
+                   PYTHONPATH="src" + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        proc = subprocess.run([sys.executable, "-c", script], env=env,
+                              capture_output=True, text=True, timeout=540,
+                              cwd=os.path.dirname(os.path.dirname(__file__)))
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        assert "SHARDED_ROBUST_OK" in proc.stdout
